@@ -1,0 +1,55 @@
+"""Relaxation hot-spot microbenchmark: the bandwidth-masked min-plus move
+step.  On this CPU container the Pallas kernel runs in interpret mode
+(correctness only — see tests/test_kernels.py); wall-clock here measures the
+jnp oracle (the DP's CPU path) across problem sizes, and derives the
+VMEM-roofline estimate for the TPU kernel from its tile configuration.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.minplus import masked_minplus_ref
+from repro.kernels.minplus.minplus import BIG, K_TILE, V_TILE, W_TILE
+
+
+def _inst(n, K, seed=0):
+    rng = np.random.default_rng(seed)
+    P = np.where(rng.random((n, K)) < 0.3, BIG, rng.random((n, K)) * 10)
+    lat = np.where(rng.random((n, n)) < 0.6, BIG, rng.random((n, n)) * 5 + 0.1)
+    bw = rng.random((n, n)) * 100
+    breq = rng.random(K - 1) * 80
+    return (jnp.asarray(P, jnp.float32), jnp.asarray(lat, jnp.float32),
+            jnp.asarray(bw, jnp.float32), jnp.asarray(breq, jnp.float32))
+
+
+def run():
+    rows = []
+    f = jax.jit(masked_minplus_ref)
+    for n, K in [(128, 9), (512, 9), (1024, 17), (2048, 17)]:
+        args = _inst(n, K)
+        jax.block_until_ready(f(*args))  # warmup/compile
+        reps = max(3, int(2e8 / (n * n * K)))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = f(*args)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / reps
+        work = n * n * K  # min-plus "MACs"
+        # TPU kernel VMEM estimate per grid step (v_tile x w_tile x k_tile
+        # candidate block + input tiles, fp32)
+        vmem = 4 * (V_TILE * W_TILE * K_TILE + V_TILE * K_TILE
+                    + 2 * V_TILE * W_TILE + 2 * W_TILE * K_TILE)
+        rows.append({
+            "name": f"minplus_move_n{n}_K{K}",
+            "us_per_call": 1e6 * dt,
+            "derived": (
+                f"gmacs_per_s={work/dt/1e9:.2f};"
+                f"kernel_tiles={V_TILE}x{W_TILE}x{K_TILE};"
+                f"kernel_vmem_bytes={vmem}"
+            ),
+        })
+    return rows

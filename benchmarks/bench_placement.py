@@ -1,0 +1,32 @@
+"""Placement-engine benchmark: BCPM planning for every assigned architecture
+on the 2-pod slice graph (quality = end-to-end route latency; time = solver
+wall clock, warm jit)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import ARCHS, get_config
+from repro.launch.placement import PodTopology, plan_pipeline
+from repro.models.config import SHAPES
+
+
+def run():
+    rows = []
+    topo = PodTopology(pods=2)
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        plan_pipeline(cfg, SHAPES["train_4k"], topo, steps_per_sec=0.05,
+                      dst_slice=topo.n_slices - 1)  # warm
+        t0 = time.perf_counter()
+        plan = plan_pipeline(cfg, SHAPES["train_4k"], topo, steps_per_sec=0.05,
+                             dst_slice=topo.n_slices - 1)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "name": f"placement_{arch}",
+            "us_per_call": 1e6 * dt,
+            "derived": (
+                f"stages={len(plan.stage_slices)};latency_us={plan.latency_us:.1f};"
+                f"route_len={len(plan.route)}" if plan else "infeasible"
+            ),
+        })
+    return rows

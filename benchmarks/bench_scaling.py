@@ -1,0 +1,61 @@
+"""Paper §3.2/§3.4.1: the exact algorithm is infeasible beyond ~50 nodes;
+the heuristic scales.  Plus the beyond-paper tensorized-DP scaling curve
+(wall time vs n) for the python path-carrying vs JAX DP implementations.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    leastcost_jax, leastcost_python, pathmap_exact, random_dataflow, waxman,
+)
+
+
+def run(seed0: int = 300):
+    rows = []
+    # exact blow-up curve
+    for n in (10, 14, 18, 22, 26):
+        t0 = time.perf_counter()
+        states = 0
+        blown = False
+        for i in range(3):
+            rg = waxman(n, seed=seed0 + i)
+            df = random_dataflow(rg, 6, seed=seed0 + 50 + i)
+            try:
+                _, st = pathmap_exact(rg, df, max_states=250_000)
+                states = max(states, st.max_set_size)
+            except MemoryError:
+                blown = True
+        dt = (time.perf_counter() - t0) / 3
+        rows.append({
+            "name": f"exact_scaling_n{n}",
+            "us_per_call": 1e6 * dt,
+            "derived": f"max_states={states};state_explosion={blown}",
+        })
+        if blown:
+            break
+    # heuristic scaling (python vs tensorized JAX, warm jit)
+    for n in (50, 100, 200, 400, 800):
+        rg = waxman(n, seed=seed0)
+        df = random_dataflow(rg, 8, seed=seed0 + 99)
+        t0 = time.perf_counter()
+        mp, _ = leastcost_python(rg, df)
+        t_py = time.perf_counter() - t0
+        leastcost_jax(rg, df)  # compile warmup
+        t0 = time.perf_counter()
+        mj, _ = leastcost_jax(rg, df)
+        t_jax = time.perf_counter() - t0
+        agree = (mp is None) == (mj is None) and (
+            mp is None or abs(mp.cost - mj.cost) < 1e-3
+        )
+        rows.append({
+            "name": f"leastcost_scaling_n{n}",
+            "us_per_call": 1e6 * t_jax,
+            "derived": (
+                f"python_us={1e6*t_py:.0f};jax_us={1e6*t_jax:.0f};"
+                f"speedup={t_py/max(t_jax,1e-9):.1f}x;agree={agree}"
+            ),
+        })
+    return rows

@@ -1,0 +1,113 @@
+"""Roofline table generator: reads results/dryrun/*.json, emits the
+per-(arch x shape x mesh) three-term roofline (EXPERIMENTS.md §Roofline).
+
+Terms (per the assignment; quantities from the per-device SPMD module, so
+the chips factor cancels):
+
+    compute    = HLO_FLOPs_per_dev / peak          (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_dev / HBM_bw        (819 GB/s)
+    collective = coll_bytes_per_dev / link_bw      (50 GB/s/link ICI)
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) with N = active params,
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops_global(rec: dict) -> float:
+    n = rec["active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n * tokens
+    tokens = rec["global_batch"]  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze_record(rec: dict) -> dict:
+    la = rec["loop_aware"]
+    chips = rec["chips"]
+    compute_s = la["flops"] / PEAK_FLOPS
+    memory_s = la["bytes_hbm"] / HBM_BW
+    coll_s = la["collective_bytes_total"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_global(rec)
+    hlo_global = la["flops"] * chips
+    step_s = max(terms.values())
+    mfu = mf / (chips * PEAK_FLOPS) / step_s if step_s > 0 else 0.0
+    return {
+        "cell": f'{rec["arch"]}__{rec["shape"]}__{rec["mesh"]}',
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_frac": mfu,  # fraction of chips' peak the model-flops
+        # achieve if the dominant term sets the step time
+        "mem_gb": (rec["memory"]["temp_bytes"] or 0) / 1e9,
+        "arg_gb": (rec["memory"]["argument_bytes"] or 0) / 1e9,
+        "coll_detail": {k: v["bytes"] for k, v in la["collectives"].items()},
+    }
+
+
+def load_all(out_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        if os.path.basename(fn).startswith("_"):
+            continue
+        with open(fn) as f:
+            rec = json.load(f)
+        if "loop_aware" not in rec:
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def markdown_table(rows: list[dict], mesh: str = "single") -> str:
+    hdr = ("| cell | compute s | memory s | collective s | bottleneck | "
+           "MODEL/HLO | roofline frac | temp GB/dev |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f'| {r["arch"]} x {r["shape"]} | {r["compute_s"]:.3g} | '
+            f'{r["memory_s"]:.3g} | {r["collective_s"]:.3g} | {r["bottleneck"]} | '
+            f'{r["useful_ratio"]:.2f} | {r["roofline_frac"]:.3f} | {r["mem_gb"]:.1f} |'
+        )
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    print(markdown_table(rows, "single"))
+    print()
+    print("worst roofline fractions (hillclimb candidates):")
+    for r in sorted([r for r in rows if r["mesh"] == "single"],
+                    key=lambda r: r["roofline_frac"])[:6]:
+        print(f'  {r["cell"]}: frac={r["roofline_frac"]:.4f} bottleneck={r["bottleneck"]}')
+    print("most collective-bound:")
+    for r in sorted([r for r in rows if r["mesh"] == "single"],
+                    key=lambda r: -(r["collective_s"] / max(r["compute_s"], 1e-12)))[:6]:
+        print(f'  {r["cell"]}: coll/comp={r["collective_s"]/max(r["compute_s"],1e-12):.1f}')
+
+
+if __name__ == "__main__":
+    main()

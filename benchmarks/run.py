@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/claim.  Prints
+``name,us_per_call,derived`` CSV (EXPERIMENTS.md cites these numbers).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer instances")
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_kernel, bench_messages, bench_optimality, bench_placement,
+        bench_scaling,
+    )
+
+    suites = [
+        ("optimality", lambda: bench_optimality.run(
+            n_instances=10 if args.quick else 40)),
+        ("messages", lambda: bench_messages.run(
+            n_instances=8 if args.quick else 25)),
+        ("scaling", bench_scaling.run),
+        ("kernel", bench_kernel.run),
+        ("placement", bench_placement.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+        except Exception as e:  # keep the harness running
+            print(f"{name}_FAILED,0,\"{type(e).__name__}: {e}\"", file=sys.stdout)
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

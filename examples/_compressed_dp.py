@@ -1,0 +1,60 @@
+"""shard_map data-parallel train step with int8 error-feedback gradient
+all-reduce (optim/compress.py) — the explicit-collective variant of the
+framework's gradient-compression story (8x traffic vs fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.steps import BuiltStep
+from repro.models.registry import init_model, input_specs, loss_fn
+from repro.optim import compress
+from repro.optim.adamw import OptConfig, TrainState, apply_updates, init_state
+
+
+def build_compressed_train_step(cfg, shape, mesh, opt: OptConfig):
+    loss = loss_fn(cfg)
+    axis = "data"
+
+    def local_loss(params, batch):
+        return loss(cfg, params, batch, remat=False)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(), P(), jax.tree.map(lambda _: P(axis), input_specs(cfg, shape, masked=True)), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    def spmd_grads(params, err, batch, key):
+        l, g = jax.value_and_grad(local_loss)(params, batch)
+        g, err = compress.compress_psum(g, err, key, axis)
+        l = jax.lax.pmean(l, axis)
+        return l, g, err
+
+    def train_step(carry, batch):
+        state, err, key = carry["state"], carry["err"], carry["key"]
+        key, sub = jax.random.split(key)
+        params_c = jax.tree.map(lambda t: t, state.params)
+        l, grads, err = spmd_grads(params_c, err, batch, sub)
+        state, metrics = apply_updates(opt, state, grads)
+        return {"state": state, "err": err, "key": key}, dict(metrics, loss=l)
+
+    fn = jax.jit(train_step, donate_argnums=(0,))
+    params, _ = init_model(cfg, jax.random.key(0))
+    state = init_state(params)
+    carry = {
+        "state": state,
+        "err": compress.init_error_state(params),
+        "key": jax.random.PRNGKey(1),  # uint32 form: checkpoint-serializable
+    }
+    built = BuiltStep(fn=fn, in_shardings=(None,), out_shardings=None,
+                      abstract_args=(), meta=dict(kind="train-int8ef"))
+    return built, carry
+
+
+if __name__ == "__main__":
+    pass

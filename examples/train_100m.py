@@ -1,0 +1,90 @@
+"""End-to-end training driver: model + synthetic data + AdamW + fault-
+tolerant Trainer (checkpoint/restart, straggler watchdog) + BCPM placement.
+
+Presets scale to the hardware at hand — ``100m`` is the assignment's
+"train a ~100M model for a few hundred steps" target (sized for a real
+accelerator); ``tiny`` finishes on this CPU container in ~a minute and
+exercises the identical code path.
+
+    PYTHONPATH=src python examples/train_100m.py --preset tiny --steps 30
+    PYTHONPATH=src python examples/train_100m.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_100m.py --preset tiny --compress int8
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.launch.placement import PodTopology, plan_pipeline
+from repro.launch.steps import build_train_step, init_train_state
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import OptConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    # ~5M params: CPU-friendly smoke-scale driver
+    "tiny": (ModelConfig(name="tiny", family="dense", n_layers=4, d_model=128,
+                         n_heads=4, n_kv_heads=2, d_ff=512, vocab=512,
+                         tie_embeddings=True, dtype="float32"),
+             ShapeConfig("train", "train", seq_len=128, global_batch=8)),
+    # ~110M params (GPT-2-small-ish llama): the assignment's target scale
+    "100m": (ModelConfig(name="lm100m", family="dense", n_layers=12,
+                         d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+                         vocab=32000, tie_embeddings=True, dtype="float32"),
+             ShapeConfig("train", "train", seq_len=512, global_batch=32,
+                         microbatch=4)),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--compress", default="none", choices=["none", "int8"])
+    ap.add_argument("--data", type=int, default=2, help="data-parallel size")
+    args = ap.parse_args()
+
+    cfg, shape = PRESETS[args.preset]
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params), "
+          f"batch={shape.global_batch}x{shape.seq_len}")
+
+    # BCPM placement preview for the production topology (the launcher would
+    # apply this stage->slice assignment before building shardings):
+    plan = plan_pipeline(cfg, shape, PodTopology(pods=1), steps_per_sec=1.0)
+    if plan:
+        print(f"BCPM pipeline placement: stages->slices {plan.stage_slices} "
+              f"(route latency {plan.latency_us:.1f}us)")
+
+    mesh = make_local_mesh(min(args.data, jax.device_count()), 1)
+    opt = OptConfig(lr=3e-3, warmup_steps=5, total_steps=max(args.steps, 100))
+
+    if args.compress == "int8":
+        from examples._compressed_dp import build_compressed_train_step
+        built, state = build_compressed_train_step(cfg, shape, mesh, opt)
+    else:
+        built = build_train_step(cfg, shape, mesh, opt, masked=True)
+        state = init_train_state(cfg, built)
+
+    data = Prefetcher(iter(SyntheticLM(cfg.vocab, shape.seq_len,
+                                       shape.global_batch, seed=0)))
+    tr = Trainer(
+        TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 3, 10)),
+        state, built.fn, data, state_shardings=built.in_shardings[0],
+    )
+    t0 = time.time()
+    tr.run(args.steps)
+    dt = time.time() - t0
+    losses = [m["loss"] for m in tr.metrics_log]
+    print(f"steps={len(losses)} wall={dt:.1f}s "
+          f"loss: first={losses[0]:.3f} min={min(losses):.3f} last={losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "loss should decrease on the synthetic task"
+    print(f"events: {tr.events}")
+    print("checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Pytree checkpoints: per-leaf .npy shards, atomic commit, async save,
+elastic restore (reshard onto a different mesh on load).
+
+Layout::
+
+    <dir>/step_000123.tmp/...   (write)
+    <dir>/step_000123/          (atomic rename on completion)
+        META.json               (treedef paths, shapes, dtypes, step)
+        leaf_00000.npy ...
+
+Restore never requires the saving mesh: leaves are loaded host-side and
+``device_put`` with shardings computed for the *current* mesh — this is the
+elastic-scaling path (checkpoint-restart onto however many devices survive).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_names(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+             for path, _ in flat]
+    leaves = [l for _, l in flat]
+    return names, leaves, jax.tree.structure(tree)
+
+
+def save(directory: str, step: int, tree: Pytree, *, blocking: bool = True):
+    """Atomic checkpoint write. Returns the thread when ``blocking=False``."""
+    host_tree = jax.tree.map(np.asarray, tree)  # device->host copy now
+
+    def _write():
+        names, leaves, _ = _flatten_with_names(host_tree)
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        meta = {"step": step, "leaves": []}
+        for i, (name, leaf) in enumerate(zip(names, leaves)):
+            fn = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fn), leaf)
+            meta["leaves"].append(
+                {"name": name, "file": fn, "shape": list(leaf.shape),
+                 "dtype": str(leaf.dtype)}
+            )
+        with open(os.path.join(tmp, "META.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for m in (re.fullmatch(r"step_(\d+)", d) for d in os.listdir(directory))
+        if m
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template: Pytree, *, step: Optional[int] = None,
+            sharding_tree: Optional[Pytree] = None) -> tuple[Pytree, int]:
+    """Load into the structure of ``template``.  ``sharding_tree`` (same
+    structure) redistributes leaves onto the current mesh (elastic restore).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "META.json")) as f:
+        meta = json.load(f)
+    leaves = [np.load(os.path.join(path, e["file"])) for e in meta["leaves"]]
+    treedef = jax.tree.structure(template)
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template {treedef.num_leaves}"
+        )
+    tree = jax.tree.unflatten(treedef, leaves)
+    if sharding_tree is not None:
+        flat_t, td = jax.tree.flatten(tree)
+        flat_s = td.flatten_up_to(sharding_tree)
+        tree = jax.tree.unflatten(
+            td, [jax.device_put(t, s) for t, s in zip(flat_t, flat_s)]
+        )
+    return tree, step
+
+
+def prune(directory: str, keep: int = 3):
+    """Retain only the newest ``keep`` checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(m.group(1))
+        for m in (re.fullmatch(r"step_(\d+)", d) for d in os.listdir(directory))
+        if m
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)

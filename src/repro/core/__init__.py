@@ -1,0 +1,35 @@
+"""Core: the paper's contribution — BCPM/BCDM mapping algorithms.
+
+Public API:
+  graph:       ResourceGraph, DataflowPath, Mapping, validate_mapping
+  exact:       pathmap_exact (paper Alg. 1-3), brute_force oracle
+  leastcost:   leastcost_python (faithful §3.4.1), leastcost_jax (tensorized)
+  simulator:   simulate (paper Alg. 4, async message passing, all §3.4 policies)
+  distributed: leastcost_shard_map (decentralized on a JAX device mesh)
+  heuristics:  anneal_python (§3.4.2), random_k_python (§3.4.3)
+  dag:         treemap_leastcost (paper §4 future-work extension)
+  topology:    waxman / barabasi_albert (BRITE stand-ins), random_dataflow
+"""
+from .graph import (  # noqa: F401
+    DataflowPath,
+    Mapping,
+    ResourceGraph,
+    mapping_cost,
+    route_from_assign,
+    validate_mapping,
+)
+from .exact import ExactStats, brute_force, pathmap_exact  # noqa: F401
+from .leastcost import (  # noqa: F401
+    HeuristicStats,
+    leastcost_jax,
+    leastcost_python,
+)
+from .simulator import SimConfig, SimStats, simulate  # noqa: F401
+from .heuristics import anneal_python, random_k_python  # noqa: F401
+from .dag import DataflowTree, TreeMapping, treemap_leastcost  # noqa: F401
+from .topology import (  # noqa: F401
+    barabasi_albert,
+    paper_example,
+    random_dataflow,
+    waxman,
+)

@@ -1,0 +1,383 @@
+"""LeastCostMap heuristic (paper §3.4.1), two implementations.
+
+1. ``leastcost_python`` — faithful path-carrying version: the exact PathMap
+   relaxation but with ``M(u, j)`` pruned to the single cheapest partial map
+   per (node, prefix-length).  Complexity ``O(n·e·p^2)``; sound w.r.t. the
+   cumulative-capacity constraint because the route is carried in the state.
+
+2. ``leastcost_jax`` — beyond-paper tensorized dynamic program over the
+   tropical (min,+) semiring so the relaxation runs on TPU vector units.
+   State ``C[v, j]`` = min cost of placing the first ``j`` dataflow nodes on
+   a route ending at ``v``.  One superstep is
+
+       place:  P[v,k]  = min_{j<=k, s[k]-s[j] <= cap[v]}  C[v,j]
+       move:   C'[w,k] = min_{v != w, bw[v,w] >= breq[k-1]}  P[v,k] + lat[v,w]
+
+   iterated to fixpoint (<= n-1 supersteps, Lemma 3.2).  The move step is the
+   bandwidth-masked min-plus matmul implemented as a Pallas TPU kernel in
+   ``repro.kernels.minplus`` (the jnp path here is the oracle / CPU path).
+   Parent pointers are tracked for reconstruction; the reconstructed mapping
+   is validated (the DP does not carry visited sets, so a route that places
+   compute on one node across two visits — possible only in adversarial
+   instances — is caught and the path-carrying fallback is used).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import (
+    INF,
+    DataflowPath,
+    Mapping,
+    ResourceGraph,
+    mapping_cost,
+    validate_mapping,
+)
+
+BIG = np.float32(1e18)  # finite stand-in for +inf inside kernels (min-plus safe)
+
+
+@dataclasses.dataclass
+class HeuristicStats:
+    max_set_size: int = 0
+    total_maps_generated: int = 0
+    rounds: int = 0
+    fallback_used: bool = False
+    validated: bool = True
+
+
+# ---------------------------------------------------------------------------
+# 1. Faithful path-carrying LeastCostMap (centralized, paper §3.4.1)
+# ---------------------------------------------------------------------------
+
+
+def leastcost_python(
+    rg: ResourceGraph, df: DataflowPath
+) -> tuple[Optional[Mapping], HeuristicStats]:
+    p, n = df.p, rg.n
+    src, dst = df.src, df.dst
+    stats = HeuristicStats()
+    # M[u][j] = (cost, assign, route) | None — single cheapest per (u, j).
+    M: list[list[Optional[tuple]]] = [[None] * (p + 1) for _ in range(n)]
+    best: Optional[Mapping] = None
+
+    creq_prefix = np.concatenate([[0.0], np.cumsum(df.creq)])
+
+    def cap_ok(j, k, v):  # place nodes j..k-1 on v
+        return creq_prefix[k] - creq_prefix[j] <= float(rg.cap[v]) + 1e-9
+
+    for j in range(1, p):
+        if not cap_ok(0, j, src):
+            break
+        M[src][j] = (0.0, (src,) * j, (src,))
+        stats.total_maps_generated += 1
+    if cap_ok(0, p, src) and src == dst:
+        best = Mapping((src,) * p, (src,), 0.0)
+
+    edges = list(rg.edges())
+    fresh = {(src, j) for j in range(1, p) if M[src][j]}
+    for rnd in range(n - 1):
+        stats.rounds = rnd + 1
+        new_fresh: set[tuple[int, int]] = set()
+        for (u, v) in edges:
+            for j in range(1, p):
+                if (u, j) not in fresh or M[u][j] is None:
+                    continue
+                if float(rg.bw[u, v]) + 1e-9 < float(df.breq[j - 1]):
+                    continue
+                cost, assign, route = M[u][j]
+                if v in route:
+                    continue
+                ncost = cost + float(rg.lat[u, v])
+                if v == dst:
+                    if cap_ok(j, p, v):
+                        m = Mapping(assign + (v,) * (p - j), route + (v,), ncost)
+                        if best is None or m.cost < best.cost:
+                            best = m
+                else:
+                    for x in range(0, p - j):
+                        if not cap_ok(j, j + x, v):
+                            break
+                        cur = M[v][j + x]
+                        if cur is None or ncost < cur[0] - 1e-12:
+                            M[v][j + x] = (ncost, assign + (v,) * x, route + (v,))
+                            stats.total_maps_generated += 1
+                            new_fresh.add((v, j + x))
+        stats.max_set_size = max(
+            stats.max_set_size, sum(1 for row in M for e in row if e is not None)
+        )
+        fresh = new_fresh
+        if not fresh:
+            break
+    return best, stats
+
+
+# ---------------------------------------------------------------------------
+# 2. Tensorized JAX DP (beyond paper)
+# ---------------------------------------------------------------------------
+
+
+def problem_tensors(rg: ResourceGraph, df: DataflowPath) -> dict:
+    """Dense float32 tensors for the DP/kernels. INF replaced by BIG."""
+    lat = np.where(np.isfinite(rg.lat), rg.lat, BIG).astype(np.float32)
+    np.fill_diagonal(lat, BIG)  # moves never stay in place (place step does)
+    s = np.concatenate([[0.0], np.cumsum(df.creq)]).astype(np.float32)
+    return dict(
+        cap=jnp.asarray(rg.cap),
+        bw=jnp.asarray(rg.bw),
+        lat=jnp.asarray(lat),
+        prefix=jnp.asarray(s),  # (p+1,)
+        breq=jnp.asarray(df.breq.astype(np.float32)),  # (p-1,)
+        src=jnp.asarray(df.src, jnp.int32),
+        dst=jnp.asarray(df.dst, jnp.int32),
+    )
+
+
+def _place_step(C, cap, prefix):
+    """P[v,k] = min over x>=0 of C[v,k-x] s.t. prefix[k]-prefix[k-x] <= cap[v].
+
+    Also returns pj[v,k] = the achieving j = k-x.  Unrolled over x (p is
+    static and small); O(n p^2) work, O(n p) memory.
+    """
+    n, P1 = C.shape
+    P = jnp.full_like(C, BIG)
+    pj = jnp.zeros(C.shape, jnp.int32)
+    k_idx = jnp.arange(P1)
+    for x in range(P1):
+        j_idx = k_idx - x
+        valid_j = j_idx >= 0
+        shifted = jnp.where(
+            valid_j[None, :], jnp.roll(C, x, axis=1), BIG
+        )  # shifted[v,k] = C[v,k-x]
+        block = prefix[k_idx] - prefix[jnp.maximum(j_idx, 0)]
+        feas = valid_j[None, :] & (block[None, :] <= cap[:, None] + 1e-6)
+        cand = jnp.where(feas, shifted, BIG)
+        upd = cand < P
+        P = jnp.where(upd, cand, P)
+        pj = jnp.where(upd, jnp.maximum(j_idx, 0)[None, :], pj)
+    return P, pj
+
+
+# §Perf hillclimb C (EXPERIMENTS.md): C2 (fused (n,n,K) pass) was REFUTED on
+# CPU — 2x slower than the k-loop (cache blowout); C4 below transposes the
+# min-reduction onto the contiguous axis instead.
+_BATCHED_MOVE_LIMIT = 0  # C2 disabled; the TPU Pallas kernel tiles explicitly
+
+
+def _move_step_ref(P, lat, bw, breq):
+    """C'[w,k] = min_v P[v,k] + lat[v,w] s.t. bw[v,w] >= breq[k-1]; plus argmin.
+
+    Pure-jnp oracle for the Pallas kernel.  k = 0 column is invalid (no
+    dataflow edge precedes node 0) -> BIG.  C4: the reduction runs over the
+    minor (contiguous) axis of the transposed link matrices — XLA hoists the
+    loop-invariant transposes out of the relaxation while-loop.
+    """
+    n, P1 = P.shape
+    # breq_k[k] = requirement of the dataflow edge carried when k nodes are
+    # placed (edge (k-1, k)); k=0 and k=p get BIG (no move possible).
+    breq_k = jnp.concatenate(
+        [jnp.full((1,), BIG), breq, jnp.full((P1 - 1 - breq.shape[0],), BIG)]
+    )
+    if n * n * P1 <= _BATCHED_MOVE_LIMIT:
+        # single fused pass over (v, w, k)
+        cand = jnp.where(
+            bw[:, :, None] >= breq_k[None, None, :],
+            P[:, None, :] + lat[:, :, None],
+            BIG,
+        )
+        return jnp.min(cand, axis=0), jnp.argmin(cand, axis=0).astype(jnp.int32)
+
+    latT = lat.T  # (w, v): reduction axis contiguous
+    bwT = bw.T
+
+    def one_k(args):
+        bk, Pk = args
+        cand = jnp.where(bwT >= bk, latT + Pk[None, :], BIG)  # (w, v)
+        return jnp.min(cand, axis=1), jnp.argmin(cand, axis=1).astype(jnp.int32)
+
+    # lax.map with O(n^2) live slabs: measured best on CPU (C2 fused-3D and
+    # C5 vmap-over-k both refuted — cache blowout; EXPERIMENTS.md §Perf C).
+    Cmv_t, pv_t = jax.lax.map(one_k, (breq_k, P.T))
+    return Cmv_t.T, pv_t.T
+
+
+def _superstep(state, tensors, move_fn, place_fn=None):
+    C, par_v, par_j, changed = state
+    place = place_fn or _place_step
+    P, pj = place(C, tensors["cap"], tensors["prefix"])
+    Cmv, pv = move_fn(P, tensors["lat"], tensors["bw"], tensors["breq"])
+    upd = Cmv < C - 1e-9
+    Cn = jnp.where(upd, Cmv, C)
+    # parent arrival state of (w,k) is (pv[w,k], pj[pv[w,k],k])
+    pj_of_pv = pj[pv, jnp.arange(C.shape[1])[None, :]]
+    par_vn = jnp.where(upd, pv, par_v)
+    par_jn = jnp.where(upd, pj_of_pv, par_j)
+    return Cn, par_vn, par_jn, jnp.any(upd)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "p", "max_rounds", "use_kernel"))
+def _leastcost_dp(tensors, n: int, p: int, max_rounds: int, use_kernel: bool = False):
+    if use_kernel:
+        from repro.kernels.minplus import ops as minplus_ops
+        from repro.kernels.place import ops as place_ops
+
+        move_fn = minplus_ops.masked_minplus
+        place_fn = place_ops.place_window
+    else:
+        move_fn = _move_step_ref
+        place_fn = None
+
+    C0 = jnp.full((n, p + 1), BIG, jnp.float32)
+    # arrival state at src with 0 nodes placed costs 0
+    C0 = C0.at[tensors["src"], 0].set(0.0)
+    par_v0 = jnp.full((n, p + 1), -1, jnp.int32)
+    par_j0 = jnp.full((n, p + 1), -1, jnp.int32)
+
+    def cond(carry):
+        t, (C, pv, pj, changed) = carry
+        return (t < max_rounds) & changed
+
+    def body(carry):
+        t, state = carry
+        state = _superstep((state[0], state[1], state[2], state[3]), tensors,
+                           move_fn, place_fn)
+        return t + 1, state
+
+    t, (C, par_v, par_j, _) = jax.lax.while_loop(
+        cond, body, (0, (C0, par_v0, par_j0, jnp.array(True)))
+    )
+    # answer: min over j<p of C[dst, j] + place nodes j..p-1 on dst
+    prefix = tensors["prefix"]
+    j_idx = jnp.arange(p + 1)
+    cap_dst = tensors["cap"][tensors["dst"]]
+    feas = (j_idx < p) & (prefix[p] - prefix[j_idx] <= cap_dst + 1e-6)
+    final = jnp.where(feas, C[tensors["dst"], :], BIG)
+    best_j = jnp.argmin(final)
+    return C, par_v, par_j, final[best_j], best_j, t
+
+
+def leastcost_jax_batched(
+    rg: ResourceGraph,
+    dfs: list,
+    *,
+    validate: bool = True,
+) -> list:
+    """Solve many mapping requests on ONE shared resource network in a
+    single vmapped DP (§Perf C6): the realistic continuous-arrival case —
+    link matrices are shared across the batch, so the per-request marginal
+    cost is one (n, p) state tensor.  Returns a list of (Mapping|None)."""
+    assert dfs
+    n = rg.n
+    p = dfs[0].p
+    assert all(d.p == p for d in dfs), "batched requests must share p"
+    base = problem_tensors(rg, dfs[0])
+    stk = {
+        "prefix": jnp.stack([
+            jnp.asarray(np.concatenate([[0.0], np.cumsum(d.creq)]).astype(np.float32))
+            for d in dfs
+        ]),
+        "breq": jnp.stack([jnp.asarray(d.breq.astype(np.float32)) for d in dfs]),
+        "src": jnp.asarray([d.src for d in dfs], jnp.int32),
+        "dst": jnp.asarray([d.dst for d in dfs], jnp.int32),
+    }
+    tensors = dict(base, **stk)
+    in_axes = ({"cap": None, "bw": None, "lat": None, "prefix": 0, "breq": 0,
+                "src": 0, "dst": 0},)
+    fn = jax.vmap(
+        lambda t: _leastcost_dp(t, n=n, p=p, max_rounds=n - 1, use_kernel=False),
+        in_axes=in_axes,
+    )
+    C, par_v, par_j, best_cost, best_j, _ = fn(tensors)
+    out = []
+    for i, df in enumerate(dfs):
+        out.append(_reconstruct(rg, df, np.asarray(C[i]), np.asarray(par_v[i]),
+                                np.asarray(par_j[i]), float(best_cost[i]),
+                                int(best_j[i]), validate))
+    return out
+
+
+def _reconstruct(rg, df, C, par_v, par_j, best_cost, best_j, validate):
+    n, p = rg.n, df.p
+    if best_cost >= BIG / 2:
+        return None
+    assign = np.full(p, -1, np.int64)
+    k = best_j
+    assign[k:p] = df.dst
+    w, route, guard = df.dst, [df.dst], 0
+    ok = True
+    while not (w == df.src and k == 0):
+        v, j = int(par_v[w, k]), int(par_j[w, k])
+        if v < 0 or guard > n * (p + 2):
+            ok = False
+            break
+        assign[j:k] = v
+        route.append(v)
+        w, k = v, j
+        guard += 1
+    route.reverse()
+    if ok and assign.min() >= 0:
+        m = Mapping(tuple(int(a) for a in assign), tuple(route), best_cost)
+        if not validate or validate_mapping(rg, df, m)[0]:
+            return m
+    m, _ = leastcost_python(rg, df)
+    return m
+
+
+def leastcost_jax(
+    rg: ResourceGraph,
+    df: DataflowPath,
+    *,
+    use_kernel: bool = False,
+    max_rounds: Optional[int] = None,
+    validate: bool = True,
+) -> tuple[Optional[Mapping], HeuristicStats]:
+    """Tensorized LeastCostMap.  Returns (mapping | None, stats)."""
+    n, p = rg.n, df.p
+    stats = HeuristicStats()
+    tensors = problem_tensors(rg, df)
+    max_rounds = max_rounds or (n - 1 if n > 1 else 1)
+    C, par_v, par_j, best_cost, best_j, rounds = _leastcost_dp(
+        tensors, n=n, p=p, max_rounds=max_rounds, use_kernel=use_kernel
+    )
+    stats.rounds = int(rounds)
+    stats.max_set_size = int(np.sum(np.asarray(C) < BIG / 2))
+    if float(best_cost) >= BIG / 2:
+        return None, stats
+    # Reconstruct by backtracking parent pointers (numpy).
+    par_v = np.asarray(par_v)
+    par_j = np.asarray(par_j)
+    assign = np.full(p, -1, np.int64)
+    k = int(best_j)
+    assign[k:p] = df.dst
+    w = df.dst
+    route = [df.dst]
+    guard = 0
+    while not (w == df.src and k == 0):
+        v, j = int(par_v[w, k]), int(par_j[w, k])
+        if v < 0 or guard > n * (p + 2):
+            stats.validated = False
+            break
+        assign[j:k] = v
+        route.append(v)
+        w, k = v, j
+        guard += 1
+    route.reverse()
+    if stats.validated and assign.min() >= 0:
+        m = Mapping(tuple(int(a) for a in assign), tuple(route), float(best_cost))
+        ok = True
+        if validate:
+            ok, _reason = validate_mapping(rg, df, m)
+            stats.validated = bool(ok)
+        if ok:
+            return m, stats
+    # Revisit anomaly or broken chain: fall back to the sound path-carrying
+    # version (rare; counted in benchmarks).
+    stats.fallback_used = True
+    m, _ = leastcost_python(rg, df)
+    return m, stats

@@ -1,0 +1,1 @@
+from . import minplus, place  # noqa: F401

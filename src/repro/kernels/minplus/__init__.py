@@ -1,0 +1,3 @@
+from . import ops, ref  # noqa: F401
+from .minplus import masked_minplus_pallas  # noqa: F401
+from .ops import masked_minplus, masked_minplus_ref  # noqa: F401

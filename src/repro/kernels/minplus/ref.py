@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the bandwidth-masked min-plus relaxation (move step).
+
+    C[w, k]  = min_v  P[v, k] + lat[v, w]   s.t.  bw[v, w] >= breq_k[k]
+    pv[w, k] = argmin_v (first minimal v, ties broken towards smaller v)
+
+Shapes: P (n, K), lat (n, n), bw (n, n), breq_k (K,).  Infeasible entries
+hold BIG (finite +inf stand-in; min-plus absorbing).  This is the inner loop
+of the tensorized LeastCostMap DP (paper §3.4.1) — one relaxation of every
+resource edge for every prefix length at once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BIG = np.float32(1e18)
+
+
+def masked_minplus_ref(P, lat, bw, breq_k):
+    """O(n^2) live memory (k-looped) reference."""
+
+    def one_k(args):
+        bk, Pk = args
+        cand = jnp.where(bw >= bk, Pk[:, None] + lat, BIG)  # [v, w]
+        cand = jnp.minimum(cand, BIG)
+        return jnp.min(cand, axis=0), jnp.argmin(cand, axis=0).astype(jnp.int32)
+
+    C_t, pv_t = jax.lax.map(one_k, (breq_k, P.T))
+    return C_t.T, pv_t.T

@@ -1,0 +1,2 @@
+from .ops import place_window, place_window_ref  # noqa: F401
+from .place import place_window_pallas  # noqa: F401

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the capacity-window place step.
+
+    P[v, k]  = min_{j <= k,  prefix[k] - prefix[j] <= cap[v]}  C[v, j]
+    pj[v, k] = argmin j (first minimal)
+
+The "place" half of the BCPM relaxation (core/leastcost.py): extend the
+partial map at node v by hosting dataflow nodes j..k-1, subject to v's
+compute capacity (prefix = cumulative creq).  Infeasible = BIG.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+BIG = np.float32(1e18)
+
+
+def place_window_ref(C, cap, prefix):
+    """C (n, K), cap (n,), prefix (K,) -> (P (n, K), pj (n, K) int32)."""
+    n, K = C.shape
+    j = jnp.arange(K)
+    k = jnp.arange(K)
+    block = prefix[None, :, None] - prefix[None, None, :]  # [1, k, j]
+    feas = (j[None, None, :] <= k[None, :, None]) & (
+        block <= cap[:, None, None] + 1e-6
+    )  # [v, k, j]
+    cand = jnp.where(feas, C[:, None, :], BIG)
+    return jnp.min(cand, axis=2), jnp.argmin(cand, axis=2).astype(jnp.int32)

@@ -1,0 +1,72 @@
+"""Sweep driver: run every (arch x shape x mesh) dry-run cell in a fresh
+subprocess (each compile gets a clean XLA world; one bad cell can't kill the
+sweep).  Writes per-cell JSON to --out and a summary line per cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import cells
+from repro.models.config import SHAPES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--only", default="", help="substring filter arch__shape")
+    ap.add_argument("--skip-done", action="store_true", default=True)
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    meshes = args.meshes.split(",")
+    todo = []
+    for arch, shape in cells():
+        for mesh in meshes:
+            stem = f"{arch}__{shape}__{mesh}"
+            if args.only and args.only not in stem:
+                continue
+            if args.skip_done and os.path.exists(
+                os.path.join(args.out, stem + ".json")
+            ):
+                print(f"[skip] {stem}")
+                continue
+            todo.append((arch, shape, mesh, stem))
+
+    failures = []
+    for i, (arch, shape, mesh, stem) in enumerate(todo):
+        t0 = time.time()
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mesh, "--out", args.out,
+        ]
+        print(f"[{i+1}/{len(todo)}] {stem} ...", flush=True)
+        try:
+            p = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=args.timeout,
+                env=dict(os.environ, PYTHONPATH="src"),
+            )
+            ok = p.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok, p = False, None
+        dt = time.time() - t0
+        if ok:
+            print(f"    OK in {dt:.0f}s", flush=True)
+        else:
+            msg = (p.stderr[-2000:] if p else "TIMEOUT")
+            failures.append({"cell": stem, "err": msg})
+            print(f"    FAIL in {dt:.0f}s: {msg[-300:]}", flush=True)
+    with open(os.path.join(args.out, "_failures.json"), "w") as f:
+        json.dump(failures, f, indent=1)
+    print(f"done: {len(todo) - len(failures)}/{len(todo)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

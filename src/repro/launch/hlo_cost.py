@@ -1,0 +1,327 @@
+"""HLO cost model: loop-aware FLOPs / HBM bytes / collective bytes.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a
+scanned-layers ``while`` body (trip count 48) or a grad-accumulation loop is
+under-counted by its trip count, which would wreck the roofline.  This
+module parses the *optimized* (post-SPMD) HLO text and walks the call graph
+with multipliers:
+
+- ``while``       -> body/condition weighted by the trip count, recovered
+                     from the condition's ``compare(iter, constant)``;
+- ``fusion/call/to_apply`` -> callee weighted by caller (bytes are counted
+                     at the *call site* — fusion internals don't touch HBM);
+- ``conditional`` -> every branch weighted by caller (upper bound; the hot
+                     paths contain no conditionals by construction).
+
+Per instruction:
+- FLOPs: ``dot`` = 2 x prod(result dims) x prod(contracting dims)
+  (counted in whatever computation it appears, incl. fusion bodies);
+- HBM bytes: operand + result bytes of top-level instructions (parameter /
+  constant / gte / tuple / bitcast excluded; fusion-internal computations
+  excluded) — the same operand+output convention XLA's own
+  ``bytes accessed`` uses;
+- collective bytes: operand bytes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute (+ their async -start
+  forms), attributed per kind.
+
+All quantities are PER DEVICE (the compiled module is the per-device SPMD
+program).  This is the profiler of record for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# result type matched non-greedily: handles tuple types with layout braces
+# and /*index=N*/ comments; first `op(` after the type is the opcode.
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\("
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALLS_RE = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|true_computation=|false_computation=)"
+    r"%?([\w.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # control-flow shells: carries alias in place; their bodies' ops are
+    # counted (with multipliers) instead
+    "while", "conditional", "call",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+    call_str: str  # from the opcode's opening paren (operands + attrs)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    is_entry: bool = False
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        cm = _COMP_RE.match(line.strip())
+        if cm and line.strip().endswith("{"):
+            cur = Computation(cm.group(2), [], is_entry=bool(cm.group(1)))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            cur.instrs.append(
+                Instr(im.group(2), im.group(3), im.group(4), line.strip(),
+                      line[im.end() - 1 :])
+            )
+    return comps
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(cond: Computation, consts: dict[str, int]) -> int | None:
+    """Recover trip count from compare(iter, const) in the loop condition."""
+    local = dict(consts)
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = _CONST_RE.search(ins.line)
+            if m:
+                local[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if ins.op == "compare" and ("direction=LT" in ins.line or "direction=GT" in ins.line):
+            # operand constants may be inlined: compare(s32[] %i, s32[] %c)
+            m = _CONST_RE.search(ins.line)
+            if m:
+                return int(m.group(1))
+            names = re.findall(r"%([\w.\-]+)", ins.line[ins.line.index("("):])
+            for n in names:
+                if n in local:
+                    return local[n]
+    return None
+
+
+def _instr_flops(ins: Instr, types: dict[str, str]) -> float:
+    if ins.op != "dot" and ins.op != "convolution":
+        return 0.0
+    out_elems = 1
+    for d in _dims(ins.type_str):
+        out_elems *= d
+    if ins.op == "convolution":
+        # rough: 2 * out * kernel_elems; kernel = second operand
+        names = re.findall(r"%([\w.\-]+)", ins.line[ins.line.index("("):])
+        kdims = _dims(types.get(names[1], "")) if len(names) > 1 else []
+        k = 1
+        for d in kdims[:-1]:
+            k *= d
+        return 2.0 * out_elems * max(k, 1)
+    # dot: contracting dims of the lhs
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    names_m = re.search(r"\(\s*([a-z0-9]+\[[\d,]*\][^%]*)?%([\w.\-]+)", ins.call_str)
+    # operand types may be inline or resolved from the definitions map
+    inline = re.findall(r"([a-z0-9]+\[[\d,]*\])[^,)]*%([\w.\-]+)", ins.call_str.split("contracting")[0])
+    lhs_type = None
+    if inline:
+        lhs_type = inline[0][0]
+    elif names_m:
+        lhs_type = types.get(names_m.group(2))
+    cdims = []
+    if mc and lhs_type:
+        ld = _dims(lhs_type)
+        cdims = [ld[int(i)] for i in mc.group(1).split(",") if i != "" and int(i) < len(ld)]
+    k = 1
+    for c in cdims:
+        k *= c
+    return 2.0 * out_elems * k
+
+
+def analyze(text: str) -> dict:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # name -> type map (per computation namespace is fine: names are unique
+    # module-wide in optimized HLO)
+    types: dict[str, str] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            types[ins.name] = ins.type_str
+
+    # which computations are fusion bodies (skip byte accounting there)
+    fusion_bodies: set[str] = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op == "fusion":
+                for callee in _CALLS_RE.findall(ins.line):
+                    fusion_bodies.add(callee)
+
+    # multipliers via BFS over the call graph
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    order = [entry.name]
+    seen = {entry.name}
+    warnings: list[str] = []
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        c = comps.get(cname)
+        if c is None:
+            continue
+        m = mult[cname]
+        for ins in c.instrs:
+            callees = _CALLS_RE.findall(ins.line)
+            bm = _BRANCHES_RE.search(ins.line)
+            if bm:
+                callees += [s.strip().lstrip("%") for s in bm.group(1).split(",")]
+            if not callees:
+                continue
+            if ins.op == "while":
+                cond_name = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                body_name = re.search(r"body=%?([\w.\-]+)", ins.line)
+                trip = None
+                tm = _TRIP_RE.search(ins.line)  # XLA-annotated trip count
+                if tm:
+                    trip = int(tm.group(1))
+                if trip is None and cond_name and cond_name.group(1) in comps:
+                    trip = _trip_count(comps[cond_name.group(1)], {})
+                if trip is None:
+                    trip = 1
+                    warnings.append(f"unknown trip count for {ins.name}; using 1")
+                for nm, f in ((cond_name, trip + 1), (body_name, trip)):
+                    if nm:
+                        n = nm.group(1)
+                        mult[n] += m * f
+                        if n not in seen:
+                            seen.add(n)
+                            order.append(n)
+            else:
+                for n in callees:
+                    mult[n] += m
+                    if n not in seen:
+                        seen.add(n)
+                        order.append(n)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll = {k: {"count": 0.0, "bytes": 0.0} for k in _COLLECTIVES}
+    top_ops: list = []
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m == 0.0:
+            continue
+        count_bytes = c.name not in fusion_bodies
+        for ins in c.instrs:
+            flops += m * _instr_flops(ins, types)
+            # collective?
+            kind = None
+            for k in _COLLECTIVES:
+                if ins.op == k or ins.op.startswith(k + "-"):
+                    kind = k
+                    break
+            if kind and not ins.op.endswith("-done"):
+                b = _type_bytes(ins.call_str)
+                if b == 0:
+                    b = _type_bytes(ins.type_str)
+                coll[kind]["count"] += m
+                coll[kind]["bytes"] += m * b
+                top_ops.append((m * b, kind, ins.line[:200]))
+            if count_bytes and ins.op not in _SKIP_BYTES_OPS:
+                inplace_fusion = ins.op == "fusion" and (
+                    "dynamic-update-slice" in ins.name or "scatter" in ins.name
+                    or "dynamic_update_slice" in ins.name
+                )
+                if inplace_fusion:
+                    # XLA fuses DUS roots in place: the carried buffer appears
+                    # as both operand and result but is not re-written; real
+                    # traffic = everything minus two copies of that buffer.
+                    all_b = _type_bytes(ins.call_str.split(" metadata=")[0]) \
+                        + _type_bytes(ins.type_str)
+                    sizes = [
+                        _type_bytes(s)
+                        for s in re.findall(r"[a-z0-9]+\[[\d,]*\]", ins.call_str)
+                    ]
+                    big = max(sizes, default=0)
+                    bytes_hbm += m * max(all_b - 2 * big, 0)
+                elif ins.op in ("dynamic-update-slice", "scatter"):
+                    # in-place update: traffic ~ 2x the update operand, not
+                    # the full buffer (matches XLA's in-place accounting)
+                    ops_inline = re.findall(
+                        r"([a-z0-9]+\[[\d,]*\])[^,)]*?%", ins.call_str
+                    )
+                    upd = _type_bytes(ops_inline[1]) if len(ops_inline) > 1 else 0
+                    if upd == 0:
+                        nms = re.findall(r"%([\w.\-]+)", ins.call_str)
+                        if len(nms) > 1:
+                            upd = _type_bytes(types.get(nms[1], ""))
+                    bytes_hbm += m * 2 * upd
+                elif ins.op in ("dynamic-slice", "slice", "gather"):
+                    bytes_hbm += m * 2 * _type_bytes(ins.type_str)
+                else:
+                    # operand types are inlined in the call when present;
+                    # fall back to the definitions map
+                    ob = _type_bytes(ins.call_str.split(" metadata=")[0])
+                    if ob == 0:
+                        for nm in re.findall(r"%([\w.\-]+)", ins.call_str)[:8]:
+                            ob += _type_bytes(types.get(nm, ""))
+                    bytes_hbm += m * (ob + _type_bytes(ins.type_str))
+    top_ops.sort(key=lambda t: -t[0])
+    return {
+        "flops": flops,
+        "bytes_hbm": bytes_hbm,
+        "collectives": coll,
+        "collective_bytes_total": sum(v["bytes"] for v in coll.values()),
+        "top_collectives": [
+            {"bytes": b, "kind": k, "hlo": h} for b, k, h in top_ops[:12]
+        ],
+        "warnings": warnings[:10],
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,288 @@
+"""jit-ready train / prefill / decode step builders for any (arch x shape).
+
+Everything here works from *abstract* shapes (``jax.eval_shape``) so the
+multi-pod dry-run can lower+compile without allocating a single parameter —
+and the same builders back the real CPU-scale runs (examples/, tests/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as lm_mod
+from repro.models.common import dtype_of
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.registry import batch_shapes, init_model, input_specs, loss_fn
+from repro.optim.adamw import OptConfig, TrainState, apply_updates, init_state
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Callable  # jit-wrapped
+    in_shardings: tuple
+    out_shardings: Any
+    abstract_args: tuple  # ShapeDtypeStructs for .lower()
+    meta: dict
+
+
+def abstract_model(cfg: ModelConfig):
+    """(param ShapeDtypeStructs, logical axes) without allocating.
+
+    The logical-axes pytree is static python (tuples of strings) built
+    alongside the params; it is captured via a side channel during the
+    abstract trace so no parameter memory is ever touched."""
+    aux: dict = {}
+
+    def helper():
+        p, a = init_model(cfg, jax.random.key(0))
+        aux["axes"] = a
+        return p
+
+    p_shapes = jax.eval_shape(helper)
+    return p_shapes, aux["axes"]
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, dtype):
+    aux: dict = {}
+
+    def helper():
+        c, a = _cache_for(cfg, shape, dtype)
+        aux["axes"] = a
+        return c
+
+    c_shapes = jax.eval_shape(helper)
+    return c_shapes, aux["axes"]
+
+
+# -- train -------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     opt: OptConfig = OptConfig(), *, n_acc: Optional[int] = None,
+                     remat: bool = True, fsdp: Optional[bool] = None,
+                     masked: bool = False, mode: str = "tp") -> BuiltStep:
+    rules_c = (shd.train_seqpar_rules(mesh) if mode == "seq"
+               else shd.train_compute_rules(mesh))
+    rules_s = shd.train_state_rules(mesh)
+    loss = loss_fn(cfg)
+    n_acc = n_acc or shape.microbatch or 1
+    assert shape.global_batch % n_acc == 0
+    # each microbatch must still shard over every batch axis (multi-pod has
+    # 32 data ways; 256/16 microbatches would leave 0.5 sequences/device)
+    batch_ways = shd._mesh_axis_size(mesh, rules_c.rules["batch"])
+    while n_acc > 1 and (shape.global_batch // n_acc) % batch_ways:
+        n_acc //= 2
+
+    p_shapes, axes = abstract_model(cfg)
+    if fsdp is None:
+        # ZeRO-3: when the tensor-parallel bf16 copy alone would eat HBM,
+        # keep compute params fully sharded and let GSPMD all-gather each
+        # layer slice inside the scan (traffic moves to the roofline's
+        # collective term; memory term drops by ~data-axis x).
+        tp_bytes = 2 * cfg.param_count() / mesh.shape["model"]
+        fsdp = tp_bytes > 2.5e9
+    compute_shardings = shd.tree_shardings(
+        rules_s if fsdp else rules_c, p_shapes, axes
+    )
+    state_shapes = jax.eval_shape(init_state, p_shapes)
+    master_shardings = shd.tree_shardings(rules_s, state_shapes.params, axes)
+    state_shardings = TrainState(
+        step=shd.NamedSharding(mesh, shd.P()),
+        params=master_shardings, m=master_shardings, v=master_shardings,
+    )
+    specs = input_specs(cfg, shape, masked=masked)
+    b_shardings = shd.batch_shardings(rules_c, specs)
+    cdt = dtype_of(cfg.dtype)
+
+    loss_kw = {}
+    if mode == "seq":
+        # sequence parallelism: the device-local S/|model| token block IS the
+        # attention q-chunk — no q-chunk loop to fight the sharding (§Perf B3)
+        loss_kw = dict(q_chunk=shape.seq_len, kv_chunk=1024)
+    elif (cfg.family in ("dense", "vlm", "moe")
+          and cfg.n_kv_heads % mesh.shape["model"] != 0):
+        # §Perf B5: GQA with kv_heads < model axis — pin K/V replicated and
+        # Q sharded on heads (GSPMD pads the uneven head count) so score
+        # contractions never split head_dim (which all-reduces per chunk)
+        bx = rules_c.rules["batch"]
+        loss_kw = dict(
+            q_spec=shd.NamedSharding(mesh, shd.P(bx, None, "model", None)),
+            kv_spec=shd.NamedSharding(mesh, shd.P(bx, None, None, None)),
+        )
+
+    def mb_loss(params, mb):
+        return loss(cfg, params, mb, remat=remat, **loss_kw)
+
+    def train_step(state: TrainState, batch):
+        params_c = jax.tree.map(lambda t: t.astype(cdt), state.params)
+        params_c = jax.lax.with_sharding_constraint(params_c, compute_shardings)
+        if n_acc == 1:
+            l, grads = jax.value_and_grad(mb_loss)(params_c, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            grads = jax.lax.with_sharding_constraint(grads, master_shardings)
+        else:
+            mb_shape = jax.tree.map(
+                lambda t: t.reshape((n_acc, t.shape[0] // n_acc) + t.shape[1:]),
+                batch,
+            )
+            # the reshape splits the global batch dim; pin the *microbatch*
+            # dim to the data axes (GSPMD would otherwise shard the n_acc
+            # loop dim and leave each microbatch replicated-wide)
+            mb_shardings = {
+                k: rules_c.sharding(
+                    (None, "batch") + (("seq",) if v.ndim > 2 else ())
+                    + (None,) * max(v.ndim - 3, 0),
+                    tuple(v.shape))
+                for k, v in mb_shape.items()
+            }
+            mb_shape = jax.lax.with_sharding_constraint(mb_shape, mb_shardings)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(mb_loss)(params_c, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                gsum = jax.lax.with_sharding_constraint(gsum, master_shardings)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda t: jnp.zeros(t.shape, jnp.float32), state.params
+            )
+            g0 = jax.lax.with_sharding_constraint(g0, master_shardings)
+            (grads, lsum), _ = jax.lax.scan(acc, (g0, 0.0), mb_shape)
+            grads = jax.tree.map(lambda g: g / n_acc, grads)
+            l = lsum / n_acc
+        new_state, metrics = apply_updates(opt, state, grads)
+        return new_state, dict(metrics, loss=l)
+
+    fn = jax.jit(
+        train_step,
+        in_shardings=(state_shardings, b_shardings),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+    )
+    return BuiltStep(
+        fn=fn,
+        in_shardings=(state_shardings, b_shardings),
+        out_shardings=(state_shardings, None),
+        abstract_args=(state_shapes, specs),
+        meta=dict(kind="train", n_acc=n_acc, rules_c=rules_c, rules_s=rules_s,
+                  compute_shardings=compute_shardings, axes=axes,
+                  param_shapes=p_shapes, fsdp=fsdp),
+    )
+
+
+def init_train_state(cfg: ModelConfig, built: BuiltStep, seed: int = 0) -> TrainState:
+    """Concrete sharded initialization (used at real-run scale)."""
+    state_shardings = built.in_shardings[0]
+
+    def _init():
+        params, _ = init_model(cfg, jax.random.key(seed))
+        return init_state(params)
+
+    return jax.jit(_init, out_shardings=state_shardings)()
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def _cache_for(cfg: ModelConfig, shape: ShapeConfig, dtype):
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec_cache(
+            cfg, shape.global_batch, shape.seq_len, shape.seq_len, dtype
+        )
+    return lm_mod.init_lm_cache(cfg, shape.global_batch, shape.seq_len, dtype)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
+    rules = shd.serve_rules(mesh, batch=shape.global_batch,
+                            kv_heads=cfg.n_kv_heads, seq=shape.seq_len)
+    cdt = dtype_of(cfg.dtype)
+    p_shapes, axes = abstract_model(cfg)
+    p_shardings = shd.tree_shardings(rules, p_shapes, axes)
+    cache_shapes, cache_axes = abstract_cache(cfg, shape, cdt)
+    c_shardings = shd.tree_shardings(rules, cache_shapes, cache_axes)
+    rep = shd.NamedSharding(mesh, shd.P())
+    tok_shard = rules.sharding(("batch", None), (shape.global_batch, 1))
+
+    if cfg.family == "encdec":
+        def decode(params, cache, token, pos):
+            return encdec_mod.encdec_decode_step(cfg, params, token, cache, pos)
+    else:
+        def decode(params, cache, token, pos):
+            return lm_mod.lm_decode_step(cfg, params, token, cache, pos)
+
+    fn = jax.jit(
+        decode,
+        in_shardings=(p_shardings, c_shardings, tok_shard, rep),
+        out_shardings=(None, c_shardings),
+        donate_argnums=(1,),
+    )
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return BuiltStep(
+        fn=fn,
+        in_shardings=(p_shardings, c_shardings, tok_shard, rep),
+        out_shardings=(None, c_shardings),
+        abstract_args=(p_shapes, cache_shapes, tok, pos),
+        meta=dict(kind="decode", rules=rules, axes=axes, cache_axes=cache_axes,
+                  param_shapes=p_shapes),
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> BuiltStep:
+    rules = shd.serve_rules(mesh, batch=shape.global_batch,
+                            kv_heads=cfg.n_kv_heads, seq=shape.seq_len)
+    cdt = dtype_of(cfg.dtype)
+    p_shapes, axes = abstract_model(cfg)
+    p_shardings = shd.tree_shardings(rules, p_shapes, axes)
+    cache_shapes, cache_axes = abstract_cache(cfg, shape, cdt)
+    c_shardings = shd.tree_shardings(rules, cache_shapes, cache_axes)
+    specs = input_specs(cfg, shape)
+    b_shardings = shd.batch_shardings(rules, specs)
+
+    if cfg.family == "encdec":
+        def prefill(params, cache, batch):
+            new_cache, _enc = encdec_mod.encdec_prefill(
+                cfg, params, batch["frames"], cache
+            )
+            return jnp.zeros((batch["frames"].shape[0], 1, cfg.vocab), jnp.float32), new_cache
+    else:
+        def prefill(params, cache, batch):
+            return lm_mod.lm_prefill(
+                cfg, params, batch["tokens"], cache,
+                patch_embeds=batch.get("patch_embeds"),
+            )
+
+    fn = jax.jit(
+        prefill,
+        in_shardings=(p_shardings, c_shardings, b_shardings),
+        out_shardings=(None, c_shardings),
+        donate_argnums=(1,),
+    )
+    return BuiltStep(
+        fn=fn,
+        in_shardings=(p_shardings, c_shardings, b_shardings),
+        out_shardings=(None, c_shardings),
+        abstract_args=(p_shapes, cache_shapes, specs),
+        meta=dict(kind="prefill", rules=rules, axes=axes, param_shapes=p_shapes),
+    )
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, shape, mesh)
+    raise ValueError(shape.kind)

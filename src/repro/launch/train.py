@@ -1,0 +1,65 @@
+"""Training launcher: any assigned arch (smoke scale on CPU; production
+shardings at pod scale — the same builders the dry-run compiles).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, train_accumulation
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.placement import PodTopology, plan_pipeline
+from repro.launch.steps import build_train_step, init_train_state
+from repro.models.config import SHAPES, ShapeConfig
+from repro.optim.adamw import OptConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=[k for k, v in SHAPES.items()
+                                                            if v.kind == "train"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (requires a pod or 256 host devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        shape = ShapeConfig("train", "train", seq_len=64, global_batch=4)
+        mesh = make_local_mesh(1, 1)
+        n_acc = 1
+    else:
+        shape = SHAPES[args.shape]
+        mesh = make_production_mesh()
+        n_acc = train_accumulation(args.arch)
+
+    plan = plan_pipeline(cfg, shape, PodTopology(pods=1), steps_per_sec=0.1)
+    if plan:
+        print(f"[placement] stages->slices {plan.stage_slices} "
+              f"(lat {plan.latency_us:.1f}us)")
+
+    built = build_train_step(cfg, shape, mesh, OptConfig(
+        lr=1e-3, warmup_steps=5, total_steps=max(args.steps, 100)),
+        n_acc=n_acc, masked=True)
+    state = init_train_state(cfg, built)
+    data = Prefetcher(iter(SyntheticLM(cfg.vocab, shape.seq_len,
+                                       shape.global_batch, seed=0)))
+    tr = Trainer(TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=10),
+                 state, built.fn, data, state_shardings=built.in_shardings[0])
+    tr.run(args.steps)
+    losses = [m["loss"] for m in tr.metrics_log]
+    print(f"{args.arch}: {len(losses)} steps, loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

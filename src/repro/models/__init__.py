@@ -1,0 +1,2 @@
+from .config import ModelConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES  # noqa: F401
+from .registry import init_model, input_specs, loss_fn, make_batch  # noqa: F401

@@ -1,0 +1,196 @@
+"""GQA attention with RoPE, chunked (flash-style) prefill and KV-cache decode.
+
+Memory discipline: prefill/train never materializes the full (S, S) score
+matrix — an online-softmax scan over KV chunks keeps live memory at
+O(q_chunk * kv_chunk) per head (DESIGN.md §4).  Decode computes one-step
+attention against the cache; with ``cache_seq`` sharded, XLA lowers the
+softmax reduction to a flash-decoding-style split-K all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, trunc_normal
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, key, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd()
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    p = {
+        "wq": trunc_normal(ks[0], (d, nq * hd), d ** -0.5, dt),
+        "wk": trunc_normal(ks[1], (d, nkv * hd), d ** -0.5, dt),
+        "wv": trunc_normal(ks[2], (d, nkv * hd), d ** -0.5, dt),
+        "wo": trunc_normal(ks[3], (nq * hd, d), (nq * hd) ** -0.5, dt),
+    }
+    a = {
+        "wq": ("d_model", "heads"),
+        "wk": ("d_model", "kv_heads"),
+        "wv": ("d_model", "kv_heads"),
+        "wo": ("heads", "d_model"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+        a["bq"], a["bk"], a["bv"] = ("heads",), ("kv_heads",), ("kv_heads",)
+    return p, a
+
+
+def _project_qkv(cfg, p, x, xkv=None):
+    B, S, _ = x.shape
+    hd, nq, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    xkv = x if xkv is None else xkv
+    q = x @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, nq, hd)
+    k = k.reshape(B, xkv.shape[1], nkv, hd)
+    v = v.reshape(B, xkv.shape[1], nkv, hd)
+    return q, k, v
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+                       q_offset=0):
+    """Online-softmax attention. q: (B,Sq,nq,hd), k/v: (B,Skv,nkv,hd).
+
+    GQA handled by reshaping q to (B, Sq, nkv, g, hd).  Scans KV chunks with
+    running (max, denom, acc); q chunks via lax.map to bound live memory.
+    """
+    B, Sq, nq, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = hd ** -0.5
+    q = (q * scale).reshape(B, Sq, nkv, g, hd)
+
+    nqc = max(1, Sq // max(q_chunk, 1)) if Sq > q_chunk else 1
+    q_chunk = Sq // nqc
+    nkc = max(1, Skv // max(kv_chunk, 1)) if Skv > kv_chunk else 1
+    kv_chunk = Skv // nkc
+
+    q_ch = q.reshape(B, nqc, q_chunk, nkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    k_ch = k.reshape(B, nkc, kv_chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    v_ch = v.reshape(B, nkc, kv_chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def per_q_chunk(args):
+        qi, qc = args  # qc: (B, qch, nkv, g, hd)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kc, vc = inputs  # (B, kvch, nkv, hd)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qc, kc).astype(jnp.float32)
+            if causal:
+                kv_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = q_pos[:, None] >= kv_pos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pexp.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", pexp.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, nkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, nkv, g, q_chunk, hd), jnp.float32)
+        # flash-style backward: never save per-chunk score tensors — the
+        # backward pass recomputes them per (q, kv) chunk pair.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False),
+            (m0, l0, a0), (jnp.arange(nkc), k_ch, v_ch)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # (B, qch, nkv, g, hd)
+
+    out = jax.lax.map(jax.checkpoint(per_q_chunk, prevent_cse=False),
+                      (jnp.arange(nqc), q_ch))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, nq, hd)
+    return out.astype(v.dtype)
+
+
+def attention(cfg, p, x, positions, *, causal=True, xkv=None, kv_positions=None,
+              q_chunk=512, kv_chunk=1024, use_rope=True, q_spec=None,
+              kv_spec=None):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    ``q_spec``/``kv_spec`` (optional NamedShardings on the 4D (B,S,H,hd)
+    tensors) pin the GQA layout when kv_heads doesn't divide the model axis:
+    without them GSPMD splits head_dim and all-reduces every score
+    contraction (§Perf B5)."""
+    q, k, v = _project_qkv(cfg, p, x, xkv)
+    if q_spec is not None:
+        q = jax.lax.with_sharding_constraint(q, q_spec)
+    if kv_spec is not None:
+        k = jax.lax.with_sharding_constraint(k, kv_spec)
+        v = jax.lax.with_sharding_constraint(v, kv_spec)
+    if xkv is None and use_rope:  # self-attention: rope both
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions if kv_positions is None else kv_positions,
+                       cfg.rope_theta)
+    out = _chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def init_cache(cfg, batch, max_len, dtype):
+    hd, nkv = cfg.hd(), cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((batch, max_len, nkv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, nkv, hd), dtype),
+    }
+
+
+def cache_axes():
+    return {
+        "k": ("cache_batch", "cache_seq", "cache_kv_heads", "cache_hd"),
+        "v": ("cache_batch", "cache_seq", "cache_kv_heads", "cache_hd"),
+    }
+
+
+def decode_attention(cfg, p, x, cache, pos, *, rope: bool = True,
+                     update_cache: bool = True):
+    """One-token decode. x: (B, 1, d); cache k/v: (B, Smax, nkv, hd);
+    pos: scalar int32, or (B,) int32 for per-slot positions (continuous
+    batching).  Returns (out, new_cache)."""
+    B = x.shape[0]
+    hd, nq, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    g = nq // nkv
+    per_slot = jnp.ndim(pos) == 1
+    q, k, v = _project_qkv(cfg, p, x)
+    if rope:
+        pp = pos[:, None].astype(jnp.int32) if per_slot else jnp.full((B, 1), pos, jnp.int32)
+        q = apply_rope(q, pp, cfg.rope_theta)
+        k = apply_rope(k, pp, cfg.rope_theta)
+    if update_cache:
+        if per_slot:
+            rows = jnp.arange(B)
+            ck = cache["k"].at[rows, pos].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, pos].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        cache = {"k": ck, "v": cv}
+    S = cache["k"].shape[1]
+    qh = (q * hd ** -0.5).reshape(B, nkv, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, cache["k"]).astype(jnp.float32)
+    if per_slot:
+        valid = jnp.arange(S)[None, None, None, :] <= pos[:, None, None, None]
+    else:
+        valid = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w.astype(cache["v"].dtype), cache["v"])
+    out = out.reshape(B, 1, nq * hd)
+    return out @ p["wo"], cache

@@ -1,0 +1,105 @@
+"""Shared layers: norms, RoPE, initializers, losses.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every ``init_*``
+returns ``(params, axes)`` where ``axes`` mirrors ``params`` with tuples of
+*logical axis names* per dimension — ``dist/sharding.py`` turns those into
+mesh ``PartitionSpec``s (MaxText/t5x-style logical sharding rules).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def trunc_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_dense(key, d_in, d_out, dtype, axes_in="d_model", axes_out="d_ff"):
+    w = trunc_normal(key, (d_in, d_out), d_in ** -0.5, dtype)
+    return w, (axes_in, axes_out)
+
+
+def rms_norm(x, w, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w + b
+
+
+def make_norm_params(cfg, dtype):
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((cfg.d_model,), dtype)}, {"w": ("d_model",)}
+    return (
+        {"w": jnp.ones((cfg.d_model,), dtype), "b": jnp.zeros((cfg.d_model,), dtype)},
+        {"w": ("d_model",), "b": ("d_model",)},
+    )
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["w"], cfg.norm_eps)
+    return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+
+
+# -- rotary position embeddings ---------------------------------------------
+
+
+def rope_angles(head_dim: int, theta: float, positions):
+    """positions: (...,) int32 -> (..., head_dim//2) angles."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    return positions[..., None].astype(jnp.float32) * inv[None, :]
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    ang = rope_angles(hd, theta, positions)  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if cos.ndim == 2:  # (S, hd/2) -> broadcast over batch
+        cos, sin = cos[None], sin[None]
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_positions(max_len: int, d: int):
+    pos = np.arange(max_len)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((max_len, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# -- losses ------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits (..., V) any dtype -> fp32 mean NLL over masked positions.
+
+    The label logit is extracted with a one-hot contraction rather than
+    ``take_along_axis`` so a vocab-sharded logits tensor never needs an
+    all-gather (the dynamic-index gather would force one under GSPMD)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    nll = logz - jnp.sum(logits * onehot, axis=-1)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,38 @@
+"""Dense MLPs: SwiGLU (llama/qwen family) and GeLU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import trunc_normal
+
+
+def init_mlp(cfg, key, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        p = {
+            "wi": trunc_normal(ks[0], (d, f), d ** -0.5, dt),
+            "wg": trunc_normal(ks[1], (d, f), d ** -0.5, dt),
+            "wo": trunc_normal(ks[2], (f, d), f ** -0.5, dt),
+        }
+        a = {"wi": ("d_model", "d_ff"), "wg": ("d_model", "d_ff"),
+             "wo": ("d_ff", "d_model")}
+    else:
+        p = {
+            "wi": trunc_normal(ks[0], (d, f), d ** -0.5, dt),
+            "bi": jnp.zeros((f,), dt),
+            "wo": trunc_normal(ks[2], (f, d), f ** -0.5, dt),
+            "bo": jnp.zeros((d,), dt),
+        }
+        a = {"wi": ("d_model", "d_ff"), "bi": ("d_ff",),
+             "wo": ("d_ff", "d_model"), "bo": ("d_model",)}
+    return p, a
+
+
+def mlp(cfg, p, x):
+    if "wg" in p:
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"] + p["bi"], approximate=True) @ p["wo"] + p["bo"]

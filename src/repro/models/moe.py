@@ -1,0 +1,103 @@
+"""Top-k routed Mixture-of-Experts with capacity buffers + shared experts.
+
+Sort-free GShard-style dispatch with *index* scatter (no (T, E, C) one-hot
+tensors): tokens are placed into per-expert capacity buffers via
+``segment``-position arithmetic; overflowing tokens are dropped (standard
+capacity-factor semantics), and the combine step scatters expert outputs
+back weighted by their (optionally re-normalized) top-k router probs.
+
+Compute cost per MoE layer = E * C * 3 * d * d_ff_expert * 2 FLOPs/matmul
+with C = ceil(T * top_k / E * capacity_factor) — i.e. proportional to the
+*active* parameter count (DESIGN.md §4), which keeps the roofline's
+MODEL_FLOPS / HLO_FLOPS ratio honest.
+
+Supports DeepSeekMoE fine-grained experts + shared experts (always-on dense
+branch) and Switch-style load-balance aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import trunc_normal
+from .mlp import init_mlp, mlp
+
+
+def init_moe(cfg, key):
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": trunc_normal(ks[0], (d, m.n_experts), d ** -0.5, jnp.float32),
+        "wi": trunc_normal(ks[1], (m.n_experts, d, m.d_ff_expert), d ** -0.5, dt),
+        "wg": trunc_normal(ks[2], (m.n_experts, d, m.d_ff_expert), d ** -0.5, dt),
+        "wo": trunc_normal(ks[3], (m.n_experts, m.d_ff_expert, d),
+                           m.d_ff_expert ** -0.5, dt),
+    }
+    a = {
+        "router": ("d_model", "experts"),
+        "wi": ("experts", "d_model", "expert_ff"),
+        "wg": ("experts", "d_model", "expert_ff"),
+        "wo": ("experts", "expert_ff", "d_model"),
+    }
+    if m.n_shared_experts:
+        sp, sa = init_mlp(cfg, ks[4], d_ff=m.d_ff_shared)
+        p["shared"], a["shared"] = sp, sa
+    return p, a
+
+
+def moe_block(cfg, p, x):
+    """x: (B, S, d) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    if m.norm_topk_prob:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    E = m.n_experts
+    C = int((T * m.top_k / E) * m.capacity_factor + 0.5)
+    C = max(C, m.top_k)
+
+    # Position of each (token, slot) within its expert's buffer.
+    flat_e = gate_idx.reshape(-1)  # (T*k,) expert ids, token-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1  # running count per expert
+    flat_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < C
+    slot = jnp.where(keep, flat_e * C + flat_pos, E * C)  # E*C = drop bin
+
+    # Dispatch by *index*: scatter token ids (int32) into slots, then gather
+    # rows.  Scattering the (E*C, d) float buffer directly makes GSPMD
+    # all-reduce the full buffer across the data axis (every shard could
+    # write anywhere): ~500 MB fp32 per layer per microbatch observed
+    # (EXPERIMENTS.md §Perf).  The index scatter is 4 bytes/slot; the row
+    # gather reduces to data movement of only the routed tokens.
+    tok_idx = jnp.repeat(jnp.arange(T), m.top_k)
+    tok_for_slot = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(tok_idx)
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    eb = xpad[tok_for_slot[: E * C]].reshape(E, C, d)
+
+    # Expert compute (einsum over stacked expert weights).
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", eb, p["wi"]
+    )
+    eo = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * C, d)
+    eo = jnp.concatenate([eo, jnp.zeros((1, d), eo.dtype)], axis=0)
+
+    # Combine: gather back, weight by gate, sum over the k slots.
+    back = eo[slot] * gate_vals.reshape(-1)[:, None].astype(eo.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[tok_idx].add(back)
+
+    # Switch-style load-balance loss.
+    me = probs.mean(0)  # mean router prob per expert
+    ce = (jax.nn.one_hot(gate_idx[:, 0], E).mean(0)).astype(jnp.float32)
+    aux = m.router_aux_coef * E * jnp.sum(me * ce)
+
+    if "shared" in p:
+        out = out + mlp(cfg, p["shared"], xt)
+    return out.reshape(B, S, d), aux

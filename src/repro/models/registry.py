@@ -1,0 +1,110 @@
+"""Model registry: family dispatch + input specs (dry-run) + real batches.
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of the given shape cell — weak-type-correct, shardable, no
+device allocation (the multi-pod dry-run contract).  ``[audio]``/``[vlm]``
+frontends are stubs per the assignment: specs provide precomputed
+frame/patch embeddings.
+
+``make_batch`` produces small *real* arrays for CPU smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import encdec as encdec_mod
+from . import transformer as lm_mod
+from .config import ModelConfig, ShapeConfig
+from .common import dtype_of
+
+
+def init_model(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec(cfg, key)
+    return lm_mod.init_lm(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_loss
+    return lm_mod.lm_loss
+
+
+# -- shape-cell input construction -------------------------------------------
+
+
+def _vlm_split(cfg: ModelConfig, seq_len: int) -> tuple[int, int]:
+    n_img = min(cfg.n_img_tokens or seq_len // 8, seq_len // 2)
+    return n_img, seq_len - n_img
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig, *,
+                 masked: bool = False) -> dict[str, Any]:
+    """Abstract shapes/dtypes of the input batch for a shape cell.
+
+    ``masked=True`` adds the packed-document ``loss_mask`` (the real data
+    pipeline emits one; the assigned dry-run cells use the unmasked form)."""
+    B, S = shape.global_batch, shape.seq_len
+    emb_dt = dtype_of(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            # encoder sees S frames; decoder is teacher-forced on S tokens
+            out = {
+                "frames": ((B, S, cfg.d_model), emb_dt),
+                "tokens": ((B, S), jnp.int32),
+                "labels": ((B, S), jnp.int32),
+            }
+        elif cfg.family == "vlm":
+            n_img, n_txt = _vlm_split(cfg, S)
+            out = {
+                "patch_embeds": ((B, n_img, cfg.d_model), emb_dt),
+                "tokens": ((B, n_txt), jnp.int32),
+                "labels": ((B, n_txt), jnp.int32),
+            }
+        else:
+            out = {
+                "tokens": ((B, S), jnp.int32),
+                "labels": ((B, S), jnp.int32),
+            }
+        if masked:
+            out["loss_mask"] = (out["labels"][0], jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": ((B, S, cfg.d_model), emb_dt)}
+        if cfg.family == "vlm":
+            n_img, n_txt = _vlm_split(cfg, S)
+            return {
+                "patch_embeds": ((B, n_img, cfg.d_model), emb_dt),
+                "tokens": ((B, n_txt), jnp.int32),
+            }
+        return {"tokens": ((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        return {"token": ((B, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                masked: bool = False) -> dict[str, jax.ShapeDtypeStruct]:
+    return {
+        k: jax.ShapeDtypeStruct(s, d)
+        for k, (s, d) in batch_shapes(cfg, shape, masked=masked).items()
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Concrete random batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (s, d) in batch_shapes(cfg, shape).items():
+        if d == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab, size=s), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 0.02, size=s), d)
+    if "labels" in out and "tokens" in out:
+        out["labels"] = jnp.roll(out["tokens"], -1, axis=-1)
+    return out

@@ -1,0 +1,394 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Both are implemented with an *associative scan* over time (TPU-friendly:
+log-depth, no sequential HLO while-loop on the hot path), sharing the
+recurrence
+
+    h_t = a_t * h_{t-1} + b_t          (elementwise in the state)
+    (a, b) ∘ (a', b') = (a*a', a'*b + b')
+
+Mamba-1: per-channel diagonal A (d_inner, N).  Mamba-2 (SSD): scalar decay
+per head; state (heads, head_p, N).  Decode carries (conv_state, ssm_state)
+and costs O(1) in sequence length — this is what makes the ``long_500k``
+cells runnable (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import trunc_normal
+
+
+def _assoc_scan(a, b):
+    """h_t = a_t h_{t-1} + b_t along axis 1 (seq). a, b: (B, S, ...)."""
+
+    def comb(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h
+
+
+SCAN_CHUNK = 512  # sequence chunk for the chunked recurrence (memory knob)
+
+
+def _chunked_assoc_scan(a, b, h0=None, chunk: int = SCAN_CHUNK):
+    """Associative scan in sequential chunks: live memory O(B * chunk * state)
+    instead of O(B * S * state) x log-depth.  h0: optional initial state
+    (B, ...) folded into the first step.  Returns (h, last_state)."""
+    B, S = a.shape[0], a.shape[1]
+    if S <= chunk:
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0)
+        h = _assoc_scan(a, b)
+        return h, h[:, -1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    state_shape = a.shape[:1] + a.shape[2:]
+    ar = a.reshape((B, nc, chunk) + a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+    br = b.reshape((B, nc, chunk) + b.shape[2:]).transpose(1, 0, 2, *range(3, b.ndim + 1))
+
+    def body(h, inp):
+        ac, bc = inp
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        hc = _assoc_scan(ac, bc)
+        return hc[:, -1], hc
+
+    h_init = jnp.zeros(state_shape, a.dtype) if h0 is None else h0
+    last, hs = jax.lax.scan(body, h_init, (ar, br))
+    h = hs.transpose(1, 0, 2, *range(3, a.ndim + 1)).reshape(b.shape)
+    return h, last
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1(cfg, key):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.expand * d
+    dtr = s.dt_rank or d // 16
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": trunc_normal(ks[0], (d, 2 * din), d ** -0.5, dt),
+        "conv_w": trunc_normal(ks[1], (s.d_conv, din), 0.3, dt),
+        "conv_b": jnp.zeros((din,), dt),
+        "x_proj": trunc_normal(ks[2], (din, dtr + 2 * s.d_state), din ** -0.5, dt),
+        "dt_proj": trunc_normal(ks[3], (dtr, din), dtr ** -0.5, dt),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.clip(np.random.default_rng(0).uniform(1e-3, 0.1, din), 1e-4, None))),
+            dt,
+        ),
+        "A_log": jnp.asarray(
+            np.log(np.tile(np.arange(1, s.d_state + 1, dtype=np.float32), (din, 1))), jnp.float32
+        ),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": trunc_normal(ks[4], (din, d), din ** -0.5, dt),
+    }
+    a = {
+        "in_proj": ("d_model", "d_inner_x2"),
+        "conv_w": ("conv", "d_inner"),
+        "conv_b": ("d_inner",),
+        "x_proj": ("d_inner", "ssm_proj"),
+        "dt_proj": ("dt_rank", "d_inner"),
+        "dt_bias": ("d_inner",),
+        "A_log": ("d_inner", "ssm_state"),
+        "D": ("d_inner",),
+        "out_proj": ("d_inner", "d_model"),
+    }
+    return p, a
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B, S, din), w: (K, din).
+
+    Returns (y, new_state) where state is the trailing K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1) :] if K > 1 else None
+    return y + b, new_state
+
+
+def mamba1_block(cfg, p, x, *, state=None):
+    """x: (B, S, d).  state: None (train/prefill) or dict for decode carry.
+
+    Returns (y, new_state);  new_state only when ``state`` is provided or
+    S == 1 decode usage is intended (prefill returns final state too)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    din = s.expand * d
+    dtr = s.dt_rank or d // 16
+
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ p["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])  # (din, N)
+
+    xf = xi.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    # discretize: a = exp(dt*A), b = dt * B * x   (ZOH-ish, mamba's simplified)
+    a = jnp.exp(dt[..., None] * A[None, None])  # (B, S, din, N)
+    bterm = (dt * xf)[..., None] * Bf[:, :, None, :]  # (B, S, din, N)
+    h0 = None if state is None else state["ssm"]  # (B, din, N)
+    h, last = _chunked_assoc_scan(a, bterm, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cf) + p["D"] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": last}
+
+
+def mamba1_decode(cfg, p, x, state):
+    """Single-token decode, O(1): x (B, 1, d)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    dtr = s.dt_rank or cfg.d_model // 16
+    xz = x[:, 0] @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # conv state: (B, K-1, din)
+    xp = jnp.concatenate([state["conv"], xi[:, None]], axis=1)
+    y = (xp * p["conv_w"][None]).sum(1) + p["conv_b"]
+    new_conv = xp[:, 1:]
+    xi = jax.nn.silu(y)
+    proj = xi @ p["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A[None])  # (B, din, N)
+    b = (dt * xi.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, None, :]
+    h = a * state["ssm"] + b
+    yv = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32)) + p["D"] * xi.astype(jnp.float32)
+    out = (yv.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out[:, None], {"conv": new_conv, "ssm": h}
+
+
+def mamba1_state_init(cfg, batch, dtype):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, din), dtype),
+        "ssm": jnp.zeros((batch, din, s.d_state), jnp.float32),
+    }
+
+
+def mamba1_state_axes():
+    return {
+        "conv": ("cache_batch", None, "d_inner"),
+        "ssm": ("cache_batch", "d_inner", None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, scalar decay per head)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(cfg, key):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.expand * d
+    nh = din // s.head_p
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt] like mamba2's fused projection
+    dout = 2 * din + 2 * s.d_state + nh
+    p = {
+        "in_proj": trunc_normal(ks[0], (d, dout), d ** -0.5, dt),
+        "conv_w": trunc_normal(ks[1], (s.d_conv, din + 2 * s.d_state), 0.3, dt),
+        "conv_b": jnp.zeros((din + 2 * s.d_state,), dt),
+        "A_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, nh)), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((din,), dt),
+        "out_proj": trunc_normal(ks[2], (din, d), din ** -0.5, dt),
+    }
+    a = {
+        "in_proj": ("d_model", "d_inner_x2"),
+        "conv_w": ("conv", "d_inner"),
+        "conv_b": ("d_inner",),
+        "A_log": ("heads_ssm",),
+        "dt_bias": ("heads_ssm",),
+        "D": ("heads_ssm",),
+        "norm_w": ("d_inner",),
+        "out_proj": ("d_inner", "d_model"),
+    }
+    return p, a
+
+
+def _split_m2(cfg, fused):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_p
+    z, xi, Bc, Cc, dt = jnp.split(
+        fused, [din, 2 * din, 2 * din + s.d_state, 2 * din + 2 * s.d_state], axis=-1
+    )
+    return z, xi, Bc, Cc, dt, din, nh
+
+
+SSD_CHUNK = 256  # SSD chunk length (matmul-form path)
+USE_SSD_CHUNKED = True  # EXPERIMENTS.md §Perf iteration A2: matmul-form SSD
+
+
+def mamba2_block(cfg, p, x, *, state=None):
+    """SSD with scalar-per-head decay. x: (B, S, d).
+
+    Two paths: the naive recurrence (associative scan over the materialized
+    (B,S,nh,hp,N) state tensor — the paper-faithful-baseline formulation) and
+    the *chunked matmul form* (Mamba-2's SSD identity): within a chunk the
+    output is a decay-masked (Q,Q) attention-like matmul, across chunks a
+    tiny state scan.  The chunked form keeps the working set at
+    O(B·nc·nh·Q²) and runs on the MXU — the hillclimb that removed the
+    dominant memory term for zamba2 (EXPERIMENTS.md §Perf)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    fused = x @ p["in_proj"]
+    z, xi, Bc, Cc, dtr, din, nh = _split_m2(cfg, fused)
+    xbc = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xi, Bc, Cc = jnp.split(xbc, [din, din + s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B, S, nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    # §Perf iteration A4: hidden states stay in the compute dtype end to end
+    # (the fp32 materialization of (B,S,din)-sized tensors dominated HBM
+    # traffic); only log-decay accumulation and the state scan are fp32.
+    xh = xi.reshape(B, S, nh, s.head_p)
+    h0 = None if state is None else state["ssm"]
+    if USE_SSD_CHUNKED and S % SSD_CHUNK == 0 and S > SSD_CHUNK:
+        y, last = _ssd_chunked(dt, A, xh, Bc, Cc, h0, SSD_CHUNK)
+    else:
+        xf = xh.astype(jnp.float32)
+        a = jnp.exp(dt * A)  # (B, S, nh)
+        bterm = (dt[..., None] * xf)[..., None] * Bc.astype(jnp.float32)[:, :, None, None, :]
+        a5 = jnp.broadcast_to(a[..., None, None], bterm.shape)
+        h, last = _chunked_assoc_scan(a5, bterm, h0)
+        y = jnp.einsum("bshpn,bsn->bshp", h, Cc.astype(jnp.float32))
+    y = (y.astype(x.dtype) + (p["D"].astype(x.dtype))[None, None, :, None]
+         * xh.astype(x.dtype))
+    y = y.reshape(B, S, din)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype) * p["norm_w"]
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": last}
+
+
+def _ssd_chunked(dt, A, xh, Bc, Cc, h0, Q):
+    """Matmul-form SSD (Mamba-2 identity), per-head scalar decay.
+
+    dt (B,S,nh), A (nh,), xh (B,S,nh,hp), Bc/Cc (B,S,N).
+    Output contribution of step s<=q:  C_q^T exp(l_q - l_s) dt_s B_s x_s
+    with l_t = cumsum(dt_t * A).  Intra-chunk: decay-masked (Q,Q) matmuls;
+    inter-chunk: state scan with per-chunk decay.  All exponents are <= 0
+    (A < 0, dt > 0): numerically safe."""
+    B, S, nh = dt.shape
+    hp = xh.shape[-1]
+    N = Bc.shape[-1]
+    nc = S // Q
+    cdt = jnp.bfloat16  # §Perf iteration A3: intra-chunk math in bf16 —
+    # halves the dominant activation traffic; the cross-chunk state scan and
+    # all log-decay accumulation stay fp32.
+    r = lambda t: t.reshape((B, nc, Q) + t.shape[2:])
+    dtc, xc = r(dt), r(xh).astype(cdt)  # (B,nc,Q,nh), (B,nc,Q,nh,hp)
+    Bcc, Ccc = r(Bc).astype(cdt), r(Cc).astype(cdt)  # (B,nc,Q,N)
+    loga = dtc * A  # (B,nc,Q,nh), <= 0, fp32
+    l = jnp.cumsum(loga, axis=2)  # inclusive cumulative log-decay
+
+    # intra-chunk: M[q,s] = G[q,s] * exp(l_q - l_s) * dt_s for s <= q
+    G = jnp.einsum("bcqn,bcsn->bcqs", Ccc, Bcc)  # (B,nc,Q,Q) bf16
+    dl = l[:, :, :, None, :] - l[:, :, None, :, :]  # (B,nc,Q,Q,nh): l_q - l_s
+    causal = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    decay = (jnp.exp(jnp.minimum(dl, 0.0))
+             * causal[None, None, :, :, None]).astype(cdt)
+    M = G[..., None] * decay * dtc[:, :, None, :, :].astype(cdt)  # fold dt_s
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xc,
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_c = sum_s exp(l_last - l_s) dt_s (x_s ⊗ B_s)
+    w = (jnp.exp(l[:, :, -1:, :] - l) * dtc).astype(cdt)  # (B,nc,Q,nh)
+    Sc = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w, xc, Bcc,
+                    preferred_element_type=jnp.float32)  # (B,nc,nh,hp,N)
+    chunk_decay = jnp.exp(l[:, :, -1, :])  # (B,nc,nh)
+
+    def carry_fn(h, inp):
+        dec, sc = inp  # (B,nh), (B,nh,hp,N)
+        h_new = dec[..., None, None] * h + sc
+        return h_new, h  # emit the state *entering* the chunk
+
+    h_init = jnp.zeros((B, nh, hp, N), jnp.float32) if h0 is None else h0
+    last, h_prev = jax.lax.scan(
+        carry_fn, h_init,
+        (chunk_decay.transpose(1, 0, 2), Sc.transpose(1, 0, 2, 3, 4)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (B,nc,nh,hp,N)
+
+    # inter-chunk: y_q += exp(l_q) * C_q^T h_prev
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Ccc,
+                         h_prev.astype(cdt),
+                         preferred_element_type=jnp.float32) * \
+        jnp.exp(l)[..., None]
+    y = (y_intra + y_inter).astype(cdt).reshape(B, S, nh, hp)
+    return y, last
+
+
+def mamba2_decode(cfg, p, x, state):
+    s = cfg.ssm
+    B = x.shape[0]
+    fused = x[:, 0] @ p["in_proj"]
+    z, xi, Bc, Cc, dtr, din, nh = _split_m2(cfg, fused[:, None])
+    z, xi, Bc, Cc, dtr = z[:, 0], xi[:, 0], Bc[:, 0], Cc[:, 0], dtr[:, 0]
+    xbc = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    xp = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)
+    y = (xp * p["conv_w"][None]).sum(1) + p["conv_b"]
+    new_conv = xp[:, 1:]
+    xbc = jax.nn.silu(y)
+    xi, Bc, Cc = jnp.split(xbc, [din, din + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, nh, s.head_p).astype(jnp.float32)
+    a = jnp.exp(dt * A)[..., None, None]  # (B, nh, 1, 1)
+    b = (dt[..., None] * xh)[..., None] * Bc.astype(jnp.float32)[:, None, None, :]
+    h = a * state["ssm"] + b
+    yv = jnp.einsum("bhpn,bn->bhp", h, Cc.astype(jnp.float32))
+    yv = yv + p["D"][None, :, None] * xh
+    y = yv.reshape(B, din).astype(x.dtype) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype) * p["norm_w"]
+    return (y @ p["out_proj"])[:, None], {"conv": new_conv, "ssm": h}
+
+
+def mamba2_state_init(cfg, batch, dtype):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_p
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, din + 2 * s.d_state), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_p, s.d_state), jnp.float32),
+    }
+
+
+def mamba2_state_axes():
+    return {
+        "conv": ("cache_batch", None, "d_inner"),
+        "ssm": ("cache_batch", "heads_ssm", None, None),
+    }

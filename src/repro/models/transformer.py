@@ -1,0 +1,536 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid / VLM families.
+
+Layers are *scanned* (stacked parameters + ``jax.lax.scan``) so the HLO stays
+O(1) in depth — essential for the 512-device dry-run compile times — and the
+scanned block is ``jax.checkpoint``-ed (full remat of the block, saving only
+the carried activation per layer).  Heterogeneous leading layers (DeepSeekMoE
+dense-first) sit outside the scan.
+
+The zamba2 hybrid applies one *shared* transformer block (own cache per call
+site, shared weights) every ``cfg.attn_every`` mamba blocks, via ``lax.cond``
+inside the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import apply_norm, dtype_of, make_norm_params, softmax_cross_entropy, trunc_normal
+from .config import ModelConfig
+from .mlp import init_mlp, mlp
+
+Pytree = Any
+
+
+# -- per-family block init ----------------------------------------------------
+
+
+def _init_block(cfg: ModelConfig, key, kind: str, d_ff_dense: int | None = None):
+    ks = jax.random.split(key, 4)
+    if kind in ("dense", "moe_dense"):
+        n1, na1 = make_norm_params(cfg, dtype_of(cfg.dtype))
+        ap, aa = attn_mod.init_attention(cfg, ks[0])
+        n2, na2 = make_norm_params(cfg, dtype_of(cfg.dtype))
+        mp, ma = init_mlp(cfg, ks[1], d_ff=d_ff_dense)
+        return (
+            {"ln1": n1, "attn": ap, "ln2": n2, "mlp": mp},
+            {"ln1": na1, "attn": aa, "ln2": na2, "mlp": ma},
+        )
+    if kind == "moe":
+        n1, na1 = make_norm_params(cfg, dtype_of(cfg.dtype))
+        ap, aa = attn_mod.init_attention(cfg, ks[0])
+        n2, na2 = make_norm_params(cfg, dtype_of(cfg.dtype))
+        mp, ma = moe_mod.init_moe(cfg, ks[1])
+        return (
+            {"ln1": n1, "attn": ap, "ln2": n2, "moe": mp},
+            {"ln1": na1, "attn": aa, "ln2": na2, "moe": ma},
+        )
+    if kind == "ssm":
+        n1, na1 = make_norm_params(cfg, dtype_of(cfg.dtype))
+        init = ssm_mod.init_mamba1 if cfg.ssm.version == 1 else ssm_mod.init_mamba2
+        sp, sa = init(cfg, ks[0])
+        return {"ln": n1, "ssm": sp}, {"ln": na1, "ssm": sa}
+    raise ValueError(kind)
+
+
+def _stack_init(cfg, key, n, kind):
+    keys = jax.random.split(key, n)
+    ps, axs = [], None
+    for i in range(n):
+        p, a = _init_block(cfg, keys[i], kind)
+        ps.append(p)
+        axs = a
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    axes = jax.tree.map(lambda t: ("layers",) + t, axs, is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, axes
+
+
+def init_lm(cfg: ModelConfig, key):
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    params: dict = {}
+    axes: dict = {}
+    params["embed"] = trunc_normal(ks[0], (cfg.vocab, cfg.d_model), 0.02, dt)
+    axes["embed"] = ("vocab", "d_model")
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"], axes["blocks"] = _stack_init(cfg, ks[1], cfg.n_layers, "dense")
+    elif fam == "moe":
+        nd = cfg.moe.first_dense_layers
+        if nd:
+            ps, aas = [], None
+            dkeys = jax.random.split(ks[2], nd)
+            for i in range(nd):
+                p, a = _init_block(cfg, dkeys[i], "moe_dense",
+                                   d_ff_dense=cfg.moe.d_ff_dense or cfg.d_ff)
+                ps.append(p)
+                aas = a
+            params["dense_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+            axes["dense_blocks"] = jax.tree.map(
+                lambda t: ("layers",) + t, aas, is_leaf=lambda x: isinstance(x, tuple)
+            )
+        params["blocks"], axes["blocks"] = _stack_init(
+            cfg, ks[1], cfg.n_layers - nd, "moe"
+        )
+    elif fam == "ssm":
+        params["blocks"], axes["blocks"] = _stack_init(cfg, ks[1], cfg.n_layers, "ssm")
+    elif fam == "hybrid":
+        params["blocks"], axes["blocks"] = _stack_init(cfg, ks[1], cfg.n_layers, "ssm")
+        sp, sa = _init_block(cfg, ks[3], "dense")
+        params["shared_attn"] = sp
+        axes["shared_attn"] = sa
+    else:
+        raise ValueError(fam)
+
+    params["final_norm"], axes["final_norm"] = make_norm_params(cfg, dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = trunc_normal(ks[4], (cfg.d_model, cfg.vocab),
+                                         cfg.d_model ** -0.5, dt)
+        axes["lm_head"] = ("d_model", "vocab")
+    return params, axes
+
+
+# -- forward passes -----------------------------------------------------------
+
+
+def _dense_block_fwd(cfg, bp, x, positions, q_chunk, kv_chunk,
+                     q_spec=None, kv_spec=None):
+    h, _ = attn_mod.attention(cfg, bp["attn"], apply_norm(cfg, bp["ln1"], x),
+                              positions, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              q_spec=q_spec, kv_spec=kv_spec)
+    x = x + h
+    key = "mlp" if "mlp" in bp else "moe"
+    if key == "mlp":
+        return x + mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln2"], x)), 0.0
+    out, aux = moe_mod.moe_block(cfg, bp["moe"], apply_norm(cfg, bp["ln2"], x))
+    return x + out, aux
+
+
+def _ssm_block_fwd(cfg, bp, x, state=None):
+    fwd = ssm_mod.mamba1_block if cfg.ssm.version == 1 else ssm_mod.mamba2_block
+    out, new_state = fwd(cfg, bp["ssm"], apply_norm(cfg, bp["ln"], x), state=state)
+    return x + out, new_state
+
+
+def hybrid_attn_layers(cfg) -> int:
+    """Number of shared-attention call sites in the zamba2-style hybrid."""
+    return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def _hybrid_split(cfg):
+    """Grouped-scan decomposition: n_layers = nG * attn_every + tail.
+
+    Each group is [mamba, shared_attn, mamba x (attn_every-1)]; the tail is
+    [mamba, shared_attn, mamba x (tail-1)] when tail > 0.  Equivalent to
+    "attn after every attn_every-th mamba block" but with *no* lax.cond in
+    the scan body — static call sites make the HLO cost/roofline exact and
+    avoid branch overhead (DESIGN.md §5)."""
+    nG = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+    return nG, tail
+
+
+def _tree_idx(tree, i):
+    return jax.tree.map(lambda t: t[i], tree)
+
+
+def lm_forward(cfg: ModelConfig, params, tokens, *, patch_embeds=None,
+               q_chunk=512, kv_chunk=1024, logits_mode="all", remat=True,
+               q_spec=None, kv_spec=None):
+    """tokens: (B, S) int32.  VLM: patch_embeds (B, n_img, d) prepended.
+
+    logits_mode: 'all' (training) | 'last' (prefill) | 'none' (returns hidden).
+    Returns (logits_or_hidden, aux_loss)."""
+    x = params["embed"][tokens]
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        if "dense_blocks" in params:
+            def dense_body(x, bp):
+                y, _ = _dense_block_fwd(cfg, bp, x, positions, q_chunk,
+                                        kv_chunk, q_spec, kv_spec)
+                return y, 0.0
+            body0 = jax.checkpoint(dense_body) if remat else dense_body
+            x, _ = jax.lax.scan(body0, x, params["dense_blocks"])
+
+        def body(x, bp):
+            y, aux = _dense_block_fwd(cfg, bp, x, positions, q_chunk,
+                                      kv_chunk, q_spec, kv_spec)
+            return y, aux
+
+        bodyr = jax.checkpoint(body) if remat else body
+        x, auxs = jax.lax.scan(bodyr, x, params["blocks"])
+        aux = jnp.sum(auxs)
+    elif fam == "ssm":
+        def body(x, bp):
+            y, _ = _ssm_block_fwd(cfg, bp, x)
+            return y, 0.0
+
+        bodyr = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(bodyr, x, params["blocks"])
+        aux = 0.0
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        nG, tail = _hybrid_split(cfg)
+        E = cfg.attn_every
+
+        def run_group(x, gp, n_mamba):
+            x, _ = _ssm_block_fwd(cfg, _tree_idx(gp, 0), x)
+            x, _ = _dense_block_fwd(cfg, shared, x, positions, q_chunk, kv_chunk)
+            if n_mamba > 1:
+                def inner(x, bp):
+                    y, _ = _ssm_block_fwd(cfg, bp, x)
+                    return y, 0.0
+                x, _ = jax.lax.scan(
+                    inner, x, jax.tree.map(lambda t: t[1:n_mamba], gp)
+                )
+            return x
+
+        head = jax.tree.map(
+            lambda t: t[: nG * E].reshape((nG, E) + t.shape[1:]), params["blocks"]
+        )
+
+        def body(x, gp):
+            return run_group(x, gp, E), 0.0
+
+        bodyr = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(bodyr, x, head)
+        if tail:
+            tail_p = jax.tree.map(lambda t: t[nG * E :], params["blocks"])
+            x = run_group(x, tail_p, tail)
+        aux = 0.0
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    if logits_mode == "none":
+        return x, aux
+    if logits_mode == "last":
+        x = x[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, aux
+
+
+def lm_loss(cfg, params, batch, **kw):
+    logits, aux = lm_forward(
+        cfg, params, batch["tokens"], patch_embeds=batch.get("patch_embeds"), **kw
+    )
+    n_img = 0 if batch.get("patch_embeds") is None else batch["patch_embeds"].shape[1]
+    if n_img:
+        logits = logits[:, n_img:]
+    mask = batch.get("loss_mask")
+    return softmax_cross_entropy(logits, batch["labels"], mask) + aux
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Decode cache pytree + logical axes, per family."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        L = cfg.n_layers
+        c = attn_mod.init_cache(cfg, batch, max_len, dtype)
+        cache = {"attn": jax.tree.map(lambda t: jnp.broadcast_to(t[None], (L,) + t.shape), c)}
+        axes = {"attn": jax.tree.map(lambda t: ("layers",) + t, attn_mod.cache_axes(),
+                                     is_leaf=lambda x: isinstance(x, tuple))}
+        return cache, axes
+    if fam == "ssm":
+        L = cfg.n_layers
+        s = ssm_mod.mamba1_state_init(cfg, batch, dtype) if cfg.ssm.version == 1 \
+            else ssm_mod.mamba2_state_init(cfg, batch, dtype)
+        sa = ssm_mod.mamba1_state_axes() if cfg.ssm.version == 1 else ssm_mod.mamba2_state_axes()
+        cache = {"ssm": jax.tree.map(lambda t: jnp.broadcast_to(t[None], (L,) + t.shape), s)}
+        axes = {"ssm": jax.tree.map(lambda t: ("layers",) + t, sa,
+                                    is_leaf=lambda x: isinstance(x, tuple))}
+        return cache, axes
+    if fam == "hybrid":
+        L, A = cfg.n_layers, hybrid_attn_layers(cfg)
+        s = ssm_mod.mamba2_state_init(cfg, batch, dtype)
+        sa = ssm_mod.mamba2_state_axes()
+        c = attn_mod.init_cache(cfg, batch, max_len, dtype)
+        cache = {
+            "ssm": jax.tree.map(lambda t: jnp.broadcast_to(t[None], (L,) + t.shape), s),
+            "attn": jax.tree.map(lambda t: jnp.broadcast_to(t[None], (A,) + t.shape), c),
+        }
+        axes = {
+            "ssm": jax.tree.map(lambda t: ("layers",) + t, sa,
+                                is_leaf=lambda x: isinstance(x, tuple)),
+            "attn": jax.tree.map(lambda t: ("layers",) + t, attn_mod.cache_axes(),
+                                 is_leaf=lambda x: isinstance(x, tuple)),
+        }
+        return cache, axes
+    raise ValueError(fam)
+
+
+def lm_decode_step(cfg: ModelConfig, params, token, cache, pos):
+    """token: (B, 1) int32; pos: scalar int32.  Returns (logits, cache)."""
+    x = params["embed"][token]
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(x, inp):
+            bp, ck = inp
+            h = apply_norm(cfg, bp["ln1"], x)
+            h, ck = attn_mod.decode_attention(cfg, bp["attn"], h, ck, pos)
+            x = x + h
+            if "mlp" in bp:
+                x = x + mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln2"], x))
+            else:
+                o, _ = moe_mod.moe_block(cfg, bp["moe"], apply_norm(cfg, bp["ln2"], x))
+                x = x + o
+            return x, ck
+
+        if "dense_blocks" in params:
+            # DeepSeek dense-first layers share the leading slices of the cache.
+            nd = params["dense_blocks"]["ln1"]["w"].shape[0]
+            cd = jax.tree.map(lambda t: t[:nd], cache["attn"])
+            x, cd = jax.lax.scan(body, x, (params["dense_blocks"], cd))
+            cm = jax.tree.map(lambda t: t[nd:], cache["attn"])
+            x, cm = jax.lax.scan(body, x, (params["blocks"], cm))
+            new_attn = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), cd, cm)
+        else:
+            x, new_attn = jax.lax.scan(body, x, (params["blocks"], cache["attn"]))
+        cache = dict(cache, attn=new_attn)
+    elif fam == "ssm":
+        dec = ssm_mod.mamba1_decode if cfg.ssm.version == 1 else ssm_mod.mamba2_decode
+
+        def body(x, inp):
+            bp, st = inp
+            o, st = dec(cfg, bp["ssm"], apply_norm(cfg, bp["ln"], x), st)
+            return x + o, st
+
+        x, new_ssm = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        cache = dict(cache, ssm=new_ssm)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        nG, tail = _hybrid_split(cfg)
+        E = cfg.attn_every
+
+        def mamba_step(x, bp, st):
+            o, st = ssm_mod.mamba2_decode(cfg, bp["ssm"], apply_norm(cfg, bp["ln"], x), st)
+            return x + o, st
+
+        def attn_step(x, ck):
+            h = apply_norm(cfg, shared["ln1"], x)
+            h, ck = attn_mod.decode_attention(cfg, shared["attn"], h, ck, pos)
+            x = x + h
+            x = x + mlp(cfg, shared["mlp"], apply_norm(cfg, shared["ln2"], x))
+            return x, ck
+
+        def run_group(x, gp, sts, ck, n_mamba):
+            x, st0 = mamba_step(x, _tree_idx(gp, 0), _tree_idx(sts, 0))
+            x, ck = attn_step(x, ck)
+            if n_mamba > 1:
+                def inner(x, inp):
+                    bp, st = inp
+                    return mamba_step(x, bp, st)
+                sl = lambda t: t[1:n_mamba]
+                x, st_rest = jax.lax.scan(
+                    inner, x, (jax.tree.map(sl, gp), jax.tree.map(sl, sts))
+                )
+                new_sts = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a[None], b]), st0, st_rest
+                )
+            else:
+                new_sts = jax.tree.map(lambda a: a[None], st0)
+            return x, new_sts, ck
+
+        head_p = jax.tree.map(
+            lambda t: t[: nG * E].reshape((nG, E) + t.shape[1:]), params["blocks"]
+        )
+        head_s = jax.tree.map(
+            lambda t: t[: nG * E].reshape((nG, E) + t.shape[1:]), cache["ssm"]
+        )
+        head_c = jax.tree.map(lambda t: t[:nG], cache["attn"])
+
+        def body(x, inp):
+            gp, sts, ck = inp
+            x, new_sts, ck = run_group(x, gp, sts, ck, E)
+            return x, (new_sts, ck)
+
+        x, (new_ssm_h, new_attn_h) = jax.lax.scan(body, x, (head_p, head_s, head_c))
+        new_ssm = jax.tree.map(
+            lambda t: t.reshape((nG * E,) + t.shape[2:]), new_ssm_h
+        )
+        new_attn = new_attn_h
+        if tail:
+            tail_p = jax.tree.map(lambda t: t[nG * E :], params["blocks"])
+            tail_s = jax.tree.map(lambda t: t[nG * E :], cache["ssm"])
+            tail_c = jax.tree.map(lambda t: t[nG], cache["attn"])
+            x, new_tail_s, tail_c = run_group(x, tail_p, tail_s, tail_c, tail)
+            new_ssm = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), new_ssm, new_tail_s
+            )
+            new_attn = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b[None]]), new_attn, tail_c
+            )
+        cache = dict(cache, attn=new_attn, ssm=new_ssm)
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, cache
+
+
+def lm_prefill(cfg: ModelConfig, params, tokens, cache, *, patch_embeds=None,
+               q_chunk=512, kv_chunk=1024):
+    """Prefill: run the full sequence, fill caches, return last-token logits.
+
+    For attention families the per-layer K/V computed during the forward pass
+    are written into the cache via a scan identical to ``lm_forward`` but
+    collecting (k, v).  SSM families return their final states.
+    """
+    x = params["embed"][tokens]
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(x, inp):
+            bp, ck = inp
+            h = apply_norm(cfg, bp["ln1"], x)
+            h, (k, v) = attn_mod.attention(cfg, bp["attn"], h, positions,
+                                           q_chunk=q_chunk, kv_chunk=kv_chunk)
+            ck = {
+                "k": jax.lax.dynamic_update_slice(ck["k"], k.astype(ck["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(ck["v"], v.astype(ck["v"].dtype), (0, 0, 0, 0)),
+            }
+            x = x + h
+            if "mlp" in bp:
+                x = x + mlp(cfg, bp["mlp"], apply_norm(cfg, bp["ln2"], x))
+            else:
+                o, _ = moe_mod.moe_block(cfg, bp["moe"], apply_norm(cfg, bp["ln2"], x))
+                x = x + o
+            return x, ck
+
+        if "dense_blocks" in params:
+            nd = params["dense_blocks"]["ln1"]["w"].shape[0]
+            cd = jax.tree.map(lambda t: t[:nd], cache["attn"])
+            x, cd = jax.lax.scan(body, x, (params["dense_blocks"], cd))
+            cm = jax.tree.map(lambda t: t[nd:], cache["attn"])
+            x, cm = jax.lax.scan(body, x, (params["blocks"], cm))
+            new_attn = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), cd, cm)
+        else:
+            x, new_attn = jax.lax.scan(body, x, (params["blocks"], cache["attn"]))
+        cache = dict(cache, attn=new_attn)
+    elif fam == "ssm":
+        def body(x, inp):
+            bp, st0 = inp
+            y, st = _ssm_block_fwd(cfg, bp, x)
+            st = jax.tree.map(lambda a, b: a.astype(b.dtype), st, st0)
+            return y, st
+
+        x, new_ssm = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        cache = dict(cache, ssm=new_ssm)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        nG, tail = _hybrid_split(cfg)
+        E = cfg.attn_every
+
+        def mamba_step(x, bp, st0):
+            h = apply_norm(cfg, bp["ln"], x)
+            o, st = ssm_mod.mamba2_block(cfg, bp["ssm"], h)
+            st = jax.tree.map(lambda a, b: a.astype(b.dtype), st, st0)
+            return x + o, st
+
+        def attn_step(x, ck):
+            h = apply_norm(cfg, shared["ln1"], x)
+            h, (k, v) = attn_mod.attention(cfg, shared["attn"], h, positions,
+                                           q_chunk=q_chunk, kv_chunk=kv_chunk)
+            ck = {
+                "k": jax.lax.dynamic_update_slice(ck["k"], k.astype(ck["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(ck["v"], v.astype(ck["v"].dtype), (0, 0, 0, 0)),
+            }
+            x = x + h
+            x = x + mlp(cfg, shared["mlp"], apply_norm(cfg, shared["ln2"], x))
+            return x, ck
+
+        def run_group(x, gp, sts, ck, n_mamba):
+            x, st0 = mamba_step(x, _tree_idx(gp, 0), _tree_idx(sts, 0))
+            x, ck = attn_step(x, ck)
+            if n_mamba > 1:
+                def inner(x, inp):
+                    bp, st = inp
+                    return mamba_step(x, bp, st)
+                sl = lambda t: t[1:n_mamba]
+                x, st_rest = jax.lax.scan(
+                    inner, x, (jax.tree.map(sl, gp), jax.tree.map(sl, sts))
+                )
+                new_sts = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a[None], b]), st0, st_rest
+                )
+            else:
+                new_sts = jax.tree.map(lambda a: a[None], st0)
+            return x, new_sts, ck
+
+        head_p = jax.tree.map(
+            lambda t: t[: nG * E].reshape((nG, E) + t.shape[1:]), params["blocks"]
+        )
+        head_s = jax.tree.map(
+            lambda t: t[: nG * E].reshape((nG, E) + t.shape[1:]), cache["ssm"]
+        )
+        head_c = jax.tree.map(lambda t: t[:nG], cache["attn"])
+
+        def body(x, inp):
+            gp, sts, ck = inp
+            x, new_sts, ck = run_group(x, gp, sts, ck, E)
+            return x, (new_sts, ck)
+
+        x, (new_ssm_h, new_attn_h) = jax.lax.scan(body, x, (head_p, head_s, head_c))
+        new_ssm = jax.tree.map(
+            lambda t: t.reshape((nG * E,) + t.shape[2:]), new_ssm_h
+        )
+        new_attn = new_attn_h
+        if tail:
+            tail_p = jax.tree.map(lambda t: t[nG * E :], params["blocks"])
+            tail_s = jax.tree.map(lambda t: t[nG * E :], cache["ssm"])
+            tail_c = jax.tree.map(lambda t: t[nG], cache["attn"])
+            x, new_tail_s, tail_c = run_group(x, tail_p, tail_s, tail_c, tail)
+            new_ssm = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), new_ssm, new_tail_s
+            )
+            new_attn = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b[None]]), new_attn, tail_c
+            )
+        cache = dict(cache, attn=new_attn, ssm=new_ssm)
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, cache

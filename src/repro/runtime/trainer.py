@@ -1,0 +1,142 @@
+"""Fault-tolerant training driver.
+
+Production posture for thousands of nodes (DESIGN.md §4):
+
+- **checkpoint/restart** — periodic async checkpoints; any step exception
+  triggers restore-from-latest and continue (``max_restarts`` bound);
+- **straggler watchdog** — per-step wall-time tracked against a rolling
+  median; steps slower than ``straggler_factor`` x median emit a straggler
+  event (callback pluggable: re-shard, demote host, alert);
+- **elastic re-mesh** — ``resize(new_mesh)`` re-shards the live train state
+  onto a different device mesh between steps (uses the elastic restore path
+  in ``ckpt.checkpoint`` semantics but in-memory);
+- failure injection hooks for tests (``inject_failure``).
+
+Single-host CPU runs exercise all of these paths (tests/test_runtime.py);
+the same driver drives the pod-scale configuration in launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    straggler_window: int = 20
+    async_ckpt: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: TrainerConfig,
+        state: Pytree,
+        step_fn: Callable[[Pytree, dict], tuple[Pytree, dict]],
+        data: Iterator[dict],
+        *,
+        state_shardings: Optional[Pytree] = None,
+        on_straggler: Optional[Callable[[int, float, float], None]] = None,
+    ):
+        self.cfg = cfg
+        self.state = state
+        self.step_fn = step_fn
+        self.data = data
+        self.state_shardings = state_shardings
+        self.on_straggler = on_straggler
+        self.step_times: list[float] = []
+        self.events: list[dict] = []
+        self.restarts = 0
+        self._ckpt_thread = None
+        self.inject_failure: Optional[Callable[[int], None]] = None
+        self.metrics_log: list[dict] = []
+
+    # -- fault handling -----------------------------------------------------
+
+    def _checkpoint(self, step: int):
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()  # one in flight at a time
+        self._ckpt_thread = ckpt.save(
+            self.cfg.ckpt_dir, step, self.state, blocking=not self.cfg.async_ckpt
+        )
+        ckpt.prune(self.cfg.ckpt_dir, self.cfg.keep_ckpts)
+
+    def _restore_latest(self):
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+        self.state, step = ckpt.restore(
+            self.cfg.ckpt_dir, self.state, sharding_tree=self.state_shardings
+        )
+        self.events.append({"kind": "restore", "step": step})
+        return step
+
+    def resize(self, new_state_shardings: Pytree):
+        """Elastic re-mesh: redistribute live state onto new shardings."""
+        flat, td = jax.tree.flatten(self.state)
+        shards = td.flatten_up_to(new_state_shardings)
+        self.state = jax.tree.unflatten(
+            td, [jax.device_put(np.asarray(t), s) for t, s in zip(flat, shards)]
+        )
+        self.state_shardings = new_state_shardings
+        self.events.append({"kind": "resize"})
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, num_steps: int, *, start_step: int = 0) -> Pytree:
+        step = start_step
+        while step < num_steps:
+            try:
+                batch = next(self.data)
+                if self.inject_failure is not None:
+                    self.inject_failure(step)
+                t0 = time.perf_counter()
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(jax.tree.leaves(self.state)[0])
+                dt = time.perf_counter() - t0
+                self._watch(step, dt)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics["step"] = step
+                metrics["step_time_s"] = dt
+                self.metrics_log.append(metrics)
+                step += 1
+                if step % self.cfg.ckpt_every == 0:
+                    self._checkpoint(step)
+            except (FloatingPointError, RuntimeError, ValueError) as e:
+                self.restarts += 1
+                self.events.append({"kind": "failure", "step": step, "err": repr(e)})
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                try:
+                    step = self._restore_latest()
+                except FileNotFoundError:
+                    step = start_step  # no checkpoint yet: restart from scratch
+        self._checkpoint(step)
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+        return self.state
+
+    def _watch(self, step: int, dt: float):
+        self.step_times.append(dt)
+        w = self.step_times[-self.cfg.straggler_window :]
+        if len(w) >= 5:
+            med = statistics.median(w)
+            if dt > self.cfg.straggler_factor * med:
+                self.events.append(
+                    {"kind": "straggler", "step": step, "dt": dt, "median": med}
+                )
+                if self.on_straggler:
+                    self.on_straggler(step, dt, med)

@@ -1,0 +1,1 @@
+from .engine import Engine, Request, cache_insert, sample_logits  # noqa: F401

@@ -1,0 +1,130 @@
+"""Slot-based continuous-batching serving engine.
+
+A fixed pool of ``n_slots`` sequences decodes in lock-step (one jit'd
+per-slot-position decode step per tick); finished slots are refilled from
+the request queue by prefililng the new prompt at batch=1 and scattering its
+KV cache into the slot (``cache_insert``).  Sampling: temperature / top-k.
+
+CPU-scale demo of the production pattern (examples/serve_pipeline.py); the
+same engine drives the pod-scale decode step built by launch/steps.py, and
+its stage placement comes from the BCPM mapper (launch/placement.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as lm
+from repro.models.config import ModelConfig
+
+
+def sample_logits(key, logits, *, temperature: float = 1.0, top_k: int = 0):
+    """logits (B, V) -> token ids (B,)."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        v, _ = jax.lax.top_k(logits, top_k)
+        logits = jnp.where(logits < v[:, -1:], -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def cache_insert(cache_pool, cache_one, slot: int):
+    """Scatter a batch=1 cache pytree into slot ``slot`` of the pool.
+
+    Attention caches have layout (L, B, S, ...); SSM states (L, B, ...)."""
+    return jax.tree.map(
+        lambda pool, one: pool.at[:, slot].set(one[:, 0].astype(pool.dtype)),
+        cache_pool, cache_one,
+    )
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (T,) int32
+    max_new: int = 32
+    out: Optional[list] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_len: int = 256, temperature: float = 0.0, top_k: int = 0,
+                 seed: int = 0):
+        assert cfg.family in ("dense", "moe", "vlm", "ssm", "hybrid")
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.temperature, self.top_k = temperature, top_k
+        self.key = jax.random.key(seed)
+        self.cache, _ = lm.init_lm_cache(cfg, n_slots, max_len, jnp.float32)
+        self.pos = np.zeros(n_slots, np.int32)  # next write position
+        self.active: list[Optional[Request]] = [None] * n_slots
+        self.last_tok = np.zeros((n_slots, 1), np.int32)
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.lm_decode_step(cfg, p, t, c, pos)
+        )
+        self._prefill = jax.jit(
+            lambda p, t, c: lm.lm_prefill(cfg, p, t, c)
+        )
+
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _fill_slot(self, slot: int):
+        if not self.queue:
+            return
+        req = self.queue.pop(0)
+        c1, _ = lm.init_lm_cache(self.cfg, 1, self.max_len, jnp.float32)
+        logits, c1 = self._prefill(self.params, req.prompt[None, :].astype(np.int32), c1)
+        self.cache = cache_insert(self.cache, c1, slot)
+        self.key, k = jax.random.split(self.key)
+        tok = sample_logits(k, logits[:, -1], temperature=self.temperature,
+                            top_k=self.top_k)
+        req.out.append(int(tok[0]))
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.last_tok[slot, 0] = int(tok[0])
+
+    def step(self):
+        """One engine tick: refill free slots, one decode step for all."""
+        for s in range(self.n_slots):
+            if self.active[s] is None:
+                self._fill_slot(s)
+        if not any(self.active):
+            return False
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.last_tok), self.cache,
+            jnp.asarray(self.pos),
+        )
+        self.key, k = jax.random.split(self.key)
+        toks = sample_logits(k, logits[:, 0], temperature=self.temperature,
+                             top_k=self.top_k)
+        toks = np.asarray(toks)
+        for s in range(self.n_slots):
+            req = self.active[s]
+            if req is None:
+                continue
+            self.pos[s] += 1
+            req.out.append(int(toks[s]))
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
+                self.done.append(req)
+                self.active[s] = None
+            else:
+                self.last_tok[s, 0] = int(toks[s])
+        return True
+
+    def run(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            if not self.step():
+                break
+            ticks += 1
+        return self.done, ticks

@@ -1,0 +1,99 @@
+"""Tree-topology extension (paper §4 future work)."""
+import numpy as np
+import pytest
+
+from repro.core import DataflowPath, pathmap_exact, waxman
+from repro.core.dag import DataflowTree, treemap_leastcost
+
+
+def test_tree_two_sources_merge():
+    rg = waxman(15, seed=7)
+    tree = DataflowTree(
+        creq=np.array([0.0, 0.0, 2.0, 0.0], np.float32),
+        parent=np.array([2, 2, 3, -1]),
+        breq=np.array([20.0, 20.0, 30.0, 0.0], np.float32),
+        pinned={0: 0, 1: 1, 3: 2},
+    )
+    tm = treemap_leastcost(rg, tree)
+    assert tm is not None
+    assert tm.valid
+    assert tm.assign[0] == 0 and tm.assign[1] == 1 and tm.assign[3] == 2
+    assert tm.cost >= 0
+
+
+def test_degenerate_tree_is_a_path():
+    """A linear tree must agree with the path solver on feasibility and not
+    beat the exact optimum."""
+    for seed in range(6):
+        rg = waxman(12, seed=seed)
+        p = 4
+        creq = np.array([0.0, 1.5, 1.0, 0.0], np.float32)
+        breq_path = np.array([20.0, 25.0, 15.0], np.float32)
+        rng = np.random.default_rng(seed)
+        src, dst = rng.choice(rg.n, 2, replace=False)
+        df = DataflowPath(creq, breq_path, int(src), int(dst))
+        ex, _ = pathmap_exact(rg, df, max_states=200_000)
+        # tree edges point towards the sink: parent[i] = i+1
+        tree = DataflowTree(
+            creq=creq,
+            parent=np.array([1, 2, 3, -1]),
+            breq=np.concatenate([breq_path, [0.0]]).astype(np.float32),
+            pinned={0: int(src), 3: int(dst)},
+        )
+        tm = treemap_leastcost(rg, tree)
+        if ex is None:
+            continue  # tree solver is a heuristic; only compare when exact ok
+        assert tm is not None
+        if tm.valid:
+            # tree DP relaxes the shared-capacity constraint per subtree but
+            # validates cumulatively; a valid result is a real mapping
+            assert tm.cost <= ex.cost * 3 + 1e-6  # sane, same order
+
+
+def test_capacity_repair():
+    # force both compute nodes to prefer one tiny node -> repair must move one
+    rg = waxman(10, seed=3, cap_range=(3.0, 3.0))
+    tree = DataflowTree(
+        creq=np.array([0.0, 2.0, 2.0, 0.0], np.float32),
+        parent=np.array([1, 2, 3, -1]),
+        breq=np.array([20.0, 20.0, 20.0, 0.0], np.float32),
+        pinned={0: 0, 3: 5},
+    )
+    tm = treemap_leastcost(rg, tree)
+    if tm is not None:
+        used = {}
+        for i, v in enumerate(tm.assign):
+            used[v] = used.get(v, 0) + float(tree.creq[i])
+        if tm.valid:
+            assert all(u <= rg.cap[v] + 1e-6 for v, u in used.items())
+
+
+def test_paper_fig2_dag_via_source_duplication():
+    """The paper's Fig. 2 dataflow: s1, s2 -> x1 -> x2 -> t with an extra
+    s1 -> x2 edge (a true DAG).  Pinned sources carry no compute, so s1 is
+    duplicated into one copy per outgoing edge — the instance becomes an
+    in-tree solvable by treemap_leastcost."""
+    from repro.core.topology import paper_example
+
+    rg, _ = paper_example()
+    A, B, F = 0, 1, 5
+    # nodes: 0=s1a, 1=s1b (the duplicate), 2=s2, 3=x1, 4=x2, 5=t
+    tree = DataflowTree(
+        creq=np.array([0, 0, 0, 2.0, 1.5, 0], np.float32),
+        parent=np.array([3, 4, 3, 4, 5, -1]),
+        breq=np.array([20.0, 20.0, 20.0, 25.0, 20.0, 0.0], np.float32),
+        pinned={0: A, 1: A, 2: B, 5: F},
+    )
+    tm = treemap_leastcost(rg, tree)
+    assert tm is not None and tm.valid
+    assert tm.assign[0] == tm.assign[1] == A  # both s1 copies at A
+    assert tm.assign[2] == B and tm.assign[5] == F
+
+
+def test_tree_serving_placement():
+    from repro.configs import get_config
+    from repro.launch.placement import PodTopology, plan_tree_serving
+
+    tm = plan_tree_serving(get_config("internvl2-2b"), PodTopology(pods=1))
+    assert tm is not None and tm.valid
+    assert len(tm.assign) == 4

@@ -1,0 +1,25 @@
+"""Deliverable (e) in CI form: the dry-run path (mesh build -> production
+shardings -> lower -> compile -> memory/cost/collective extraction) runs end
+to end in a subprocess on a scaled-down (4x4 / 2x4x4) host-device mesh."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_cell_compiles_scaled(tmp_path, mesh):
+    env = dict(os.environ, PYTHONPATH="src", REPRO_DRYRUN_SCALE="4")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-0.5b",
+         "--shape", "decode_32k", "--mesh", mesh, "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert p.returncode == 0, p.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"qwen2-0.5b__decode_32k__{mesh}.json"))
+    assert rec["chips"] == (32 if mesh == "multi" else 16)
+    la = rec["loop_aware"]
+    assert la["flops"] > 0 and la["bytes_hbm"] > 0
+    assert rec["memory"]["temp_bytes"] is not None

@@ -1,0 +1,72 @@
+"""Exact PathMap (paper Alg. 1-3) vs an independent brute-force oracle."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DataflowPath, ResourceGraph, brute_force, pathmap_exact, paper_example,
+    random_dataflow, validate_mapping, waxman,
+)
+
+
+def test_paper_example_optimal():
+    rg, df = paper_example()
+    m, stats = pathmap_exact(rg, df)
+    assert m is not None
+    ok, why = validate_mapping(rg, df, m)
+    assert ok, why
+    # the paper's §2.2 optimal mapping: s,x1,x2 -> B, x3 -> D, t -> F
+    assert m.cost == pytest.approx(4.0)
+    assert m.assign == (1, 1, 1, 3, 5)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_exact_matches_brute_force(seed):
+    rg = waxman(11, seed=seed)
+    df = random_dataflow(rg, 5, seed=seed + 500)
+    ex, _ = pathmap_exact(rg, df, max_states=300_000)
+    bf = brute_force(rg, df, max_routes=300_000)
+    assert (ex is None) == (bf is None)
+    if ex is not None:
+        assert ex.cost == pytest.approx(bf.cost, rel=1e-5)
+        ok, why = validate_mapping(rg, df, ex)
+        assert ok, why
+
+
+def test_find_first_returns_feasible():
+    rg, df = paper_example()
+    m, _ = pathmap_exact(rg, df, find_first=True)
+    assert m is not None
+    ok, why = validate_mapping(rg, df, m)
+    assert ok, why
+
+
+def test_infeasible_capacity():
+    # no node can host the middle computation
+    rg = ResourceGraph.from_edge_list(
+        [1.0, 1.0, 1.0], [(0, 1, 100.0, 1.0), (1, 2, 100.0, 1.0)]
+    )
+    df = DataflowPath.make([0.0, 5.0, 0.0], [10.0, 10.0], src=0, dst=2)
+    m, _ = pathmap_exact(rg, df)
+    assert m is None
+
+
+def test_infeasible_bandwidth():
+    rg = ResourceGraph.from_edge_list(
+        [5.0, 5.0, 5.0], [(0, 1, 5.0, 1.0), (1, 2, 5.0, 1.0)]
+    )
+    df = DataflowPath.make([0.0, 1.0, 0.0], [10.0, 10.0], src=0, dst=2)
+    m, _ = pathmap_exact(rg, df)
+    assert m is None
+
+
+def test_pass_through_hop():
+    # dst reachable only through a zero-capacity relay: a dataflow edge must
+    # span a multi-hop path (paper §2.1 zero-computation visits)
+    rg = ResourceGraph.from_edge_list(
+        [5.0, 0.0, 5.0], [(0, 1, 100.0, 1.0), (1, 2, 100.0, 1.0)]
+    )
+    df = DataflowPath.make([0.0, 2.0, 0.0], [10.0, 10.0], src=0, dst=2)
+    m, _ = pathmap_exact(rg, df)
+    assert m is not None
+    assert m.route == (0, 1, 2)
+    assert 1 not in set(m.assign)  # relay hosts nothing

@@ -1,0 +1,70 @@
+"""Pallas masked min-plus kernel vs pure-jnp oracle: shape/dtype sweep in
+interpret mode (CPU), including argmin tie-breaking and padding edges."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.minplus import masked_minplus, masked_minplus_ref
+from repro.kernels.minplus.minplus import masked_minplus_pallas, BIG
+
+
+def _instance(n, K, seed, inf_frac=0.4):
+    rng = np.random.default_rng(seed)
+    P = np.where(rng.random((n, K)) < inf_frac, BIG,
+                 rng.random((n, K)) * 10).astype(np.float32)
+    lat = np.where(rng.random((n, n)) < 0.5, BIG,
+                   rng.random((n, n)) * 5 + 0.1).astype(np.float32)
+    bw = (rng.random((n, n)) * 100).astype(np.float32)
+    breq = (rng.random(max(K - 1, 1)) * 80).astype(np.float32)
+    return (jnp.asarray(P), jnp.asarray(lat), jnp.asarray(bw),
+            jnp.asarray(breq[: K - 1]))
+
+
+@pytest.mark.parametrize("n,K", [(8, 2), (17, 3), (50, 7), (128, 9), (130, 3),
+                                 (256, 33), (300, 17)])
+def test_kernel_matches_oracle(n, K):
+    args = _instance(n, K, seed=n * 1000 + K)
+    C1, pv1 = masked_minplus(*args)
+    C2, pv2 = masked_minplus_ref(*args)
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(pv1), np.asarray(pv2))
+
+
+@pytest.mark.parametrize("tiles", [(8, 8, 8), (128, 8, 8), (8, 128, 128),
+                                   (64, 64, 16)])
+def test_kernel_tile_sweep(tiles):
+    args = _instance(100, 5, seed=42)
+    C1, pv1 = masked_minplus(*args, tiles=tiles)
+    C2, pv2 = masked_minplus_ref(*args)
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(pv1), np.asarray(pv2))
+
+
+def test_all_infeasible_column():
+    n, K = 32, 4
+    P, lat, bw, breq = _instance(n, K, seed=7)
+    breq = jnp.full((K - 1,), BIG)  # nothing satisfies any bandwidth
+    C, pv = masked_minplus(P, lat, bw, breq)
+    assert bool((np.asarray(C) >= BIG / 2).all())
+
+
+def test_ties_break_to_first_v():
+    n, K = 16, 3
+    P = jnp.zeros((n, K), jnp.float32)  # every v offers cost 0
+    lat = jnp.ones((n, n), jnp.float32)
+    bw = jnp.full((n, n), 100.0, jnp.float32)
+    breq = jnp.asarray([1.0, 1.0], jnp.float32)
+    _, pv = masked_minplus(P, lat, bw, breq)
+    _, pv_ref = masked_minplus_ref(P, lat, bw, breq)
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(pv_ref))
+    assert (np.asarray(pv)[:, 1:] == 0).all()
+
+
+def test_interpret_flag_explicit():
+    args = _instance(64, 4, seed=9)
+    from repro.kernels.minplus.ops import _breq_k
+    bq = _breq_k(args[3], args[0].shape[1])
+    C, pv = masked_minplus_pallas(args[0], args[1], args[2], bq, interpret=True)
+    C2, pv2 = masked_minplus_ref(*args)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(C2), rtol=1e-6)

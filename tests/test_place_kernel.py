@@ -1,0 +1,44 @@
+"""Capacity-window place-step kernel vs oracle (interpret mode sweep) and
+vs the DP's unrolled place step."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.leastcost import _place_step
+from repro.kernels.place import place_window, place_window_ref
+from repro.kernels.place.place import BIG
+
+
+def _inst(n, K, seed):
+    rng = np.random.default_rng(seed)
+    C = np.where(rng.random((n, K)) < 0.4, BIG, rng.random((n, K)) * 10)
+    cap = (rng.random(n) * 8).astype(np.float32)
+    creq = rng.random(K - 1) * 3
+    prefix = np.concatenate([[0.0], np.cumsum(creq)]).astype(np.float32)
+    return (jnp.asarray(C, jnp.float32), jnp.asarray(cap), jnp.asarray(prefix))
+
+
+@pytest.mark.parametrize("n,K", [(10, 3), (64, 9), (130, 7), (256, 17), (300, 33)])
+def test_place_kernel_matches_oracle(n, K):
+    C, cap, prefix = _inst(n, K, seed=n + K)
+    P1, pj1 = place_window(C, cap, prefix)
+    P2, pj2 = place_window_ref(C, cap, prefix)
+    np.testing.assert_allclose(np.asarray(P1), np.asarray(P2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(pj1), np.asarray(pj2))
+
+
+@pytest.mark.parametrize("tiles", [(8, 8), (128, 16), (64, 8)])
+def test_place_kernel_tile_sweep(tiles):
+    C, cap, prefix = _inst(100, 9, seed=5)
+    P1, pj1 = place_window(C, cap, prefix, tiles=tiles)
+    P2, pj2 = place_window_ref(C, cap, prefix)
+    np.testing.assert_allclose(np.asarray(P1), np.asarray(P2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(pj1), np.asarray(pj2))
+
+
+def test_matches_dp_place_step():
+    C, cap, prefix = _inst(40, 6, seed=11)
+    P1, pj1 = _place_step(C, cap, prefix)
+    P2, pj2 = place_window_ref(C, cap, prefix)
+    np.testing.assert_allclose(np.asarray(P1), np.asarray(P2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(pj1), np.asarray(pj2))

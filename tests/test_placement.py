@@ -1,0 +1,60 @@
+"""BCPM placement engine (the paper's technique driving the launcher)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import validate_mapping
+from repro.launch.placement import (
+    PodTopology, plan_pipeline, plan_serving, slice_resource_graph,
+)
+from repro.models.config import SHAPES
+
+
+def test_slice_graph_shape():
+    topo = PodTopology(pods=2)
+    rg = slice_resource_graph(topo)
+    assert rg.n == 32
+    # ring within each pod + one DCI link between pods
+    assert np.isfinite(rg.lat[15, 16])  # DCI
+    assert rg.bw[0, 1] == 16 * 50.0
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "llama3.2-1b", "deepseek-moe-16b"])
+def test_pipeline_plan_feasible_and_valid(arch):
+    cfg = get_config(arch)
+    plan = plan_pipeline(cfg, SHAPES["train_4k"], PodTopology(pods=2),
+                         steps_per_sec=0.05, dst_slice=31)
+    assert plan is not None, arch
+    rg = slice_resource_graph(PodTopology(pods=2))
+    ok, why = validate_mapping(
+        rg,
+        _df_of(plan), plan.mapping,
+    )
+    assert ok, (arch, why)
+    # stages occupy a contiguous chain (each slice visited once)
+    assert len(set(plan.route)) == len(plan.route)
+
+
+def _df_of(plan):
+    from repro.core.graph import DataflowPath
+    creq = np.asarray([0.0] + plan.stage_tflops + [0.0], np.float32)
+    breq = np.asarray(
+        [plan.stage_bw_gbps[0]] + plan.stage_bw_gbps + [plan.stage_bw_gbps[-1]],
+        np.float32,
+    )
+    return DataflowPath(creq, breq, plan.mapping.assign[0], plan.mapping.assign[-1])
+
+
+def test_serving_dataflow_colocates_when_cheap():
+    cfg = get_config("internvl2-2b")
+    plan = plan_serving(cfg, SHAPES["prefill_32k"], requests_per_sec=2)
+    assert plan is not None
+    # a light 2-stage dataflow should not span the pod
+    assert len(set(plan.stage_slices)) <= 2
+
+
+def test_rate_too_high_is_infeasible():
+    cfg = get_config("qwen2.5-14b")
+    plan = plan_pipeline(cfg, SHAPES["train_4k"], PodTopology(pods=1),
+                         steps_per_sec=1e6)
+    assert plan is None

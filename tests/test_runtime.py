@@ -1,0 +1,128 @@
+"""Fault-tolerance runtime: checkpoint/restart, failure injection, straggler
+watchdog, elastic resharding — all exercised for real on CPU."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import build_train_step, init_train_state
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import OptConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=128, dtype="float32")
+SHAPE = ShapeConfig("s", "train", seq_len=16, global_batch=4)
+
+
+def _mk_trainer(tmp, **kw):
+    mesh = make_local_mesh(1, 1)
+    built = build_train_step(CFG, SHAPE, mesh,
+                             OptConfig(lr=1e-3, warmup_steps=2, total_steps=100),
+                             masked=True)
+    state = init_train_state(CFG, built)
+    data = iter(SyntheticLM(CFG.vocab, SHAPE.seq_len, SHAPE.global_batch, seed=0))
+    tc = TrainerConfig(ckpt_dir=str(tmp), ckpt_every=5, async_ckpt=False, **kw)
+    return Trainer(tc, state, built.fn, data,
+                   state_shardings=built.in_shardings[0]), built
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tr, built = _mk_trainer(tmp_path)
+    tr.run(6)
+    step = ckpt.latest_step(str(tmp_path))
+    assert step is not None and step >= 5
+    restored, s = ckpt.restore(str(tmp_path), tr.state)
+    got = jax.tree.leaves(restored)[1]
+    want = jax.tree.leaves(jax.tree.map(np.asarray, tr.state))[1]
+    # restored leaf matches a saved version of the state (same shapes/dtypes)
+    assert got.shape == np.asarray(want).shape
+
+
+def test_failure_injection_restarts(tmp_path):
+    tr, _ = _mk_trainer(tmp_path)
+    fired = {"n": 0}
+
+    def boom(step):
+        if step == 7 and fired["n"] == 0:
+            fired["n"] += 1
+            raise RuntimeError("injected node failure")
+
+    tr.inject_failure = boom
+    tr.run(10)
+    kinds = [e["kind"] for e in tr.events]
+    assert "failure" in kinds and "restore" in kinds
+    assert tr.restarts == 1
+    assert len(tr.metrics_log) >= 10
+
+
+def test_straggler_watchdog(tmp_path):
+    tr, _ = _mk_trainer(tmp_path, straggler_factor=2.5, straggler_window=10)
+    slow = {"hit": False}
+    orig = tr.step_fn
+
+    def maybe_slow(state, batch):
+        if len(tr.step_times) == 8 and not slow["hit"]:
+            slow["hit"] = True
+            time.sleep(max(0.3, 5 * np.median(tr.step_times)))
+        return orig(state, batch)
+
+    tr.step_fn = maybe_slow
+    tr.run(12)
+    assert any(e["kind"] == "straggler" for e in tr.events)
+
+
+def test_elastic_reshard(tmp_path):
+    """Save under one mesh, restore under a different one (node loss)."""
+    import subprocess, sys, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, numpy as np
+        from repro.ckpt import checkpoint as ckpt
+        from repro.launch.mesh import make_local_mesh
+        from repro.launch.steps import build_train_step, init_train_state
+        from repro.models.config import ModelConfig, ShapeConfig
+        from repro.optim.adamw import OptConfig
+        from repro.models.registry import make_batch
+        from repro.dist import sharding as shd
+
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=2, n_kv_heads=2, d_ff=64, vocab=128,
+                          dtype="float32")
+        shape = ShapeConfig("s", "train", 16, 4)
+        mesh4 = make_local_mesh(4, 1)
+        built4 = build_train_step(cfg, shape, mesh4, OptConfig())
+        state = init_train_state(cfg, built4)
+        batch = make_batch(cfg, shape)
+        state, _ = built4.fn(state, batch)
+        ckpt.save("{d}", 1, state)
+
+        # "lose" two nodes: restore onto a 2-device mesh
+        mesh2 = make_local_mesh(2, 1)
+        built2 = build_train_step(cfg, shape, mesh2, OptConfig())
+        restored, step = ckpt.restore("{d}", jax.tree.map(np.asarray, state),
+                                      sharding_tree=built2.in_shardings[0])
+        state2, m = built2.fn(restored, batch)
+        assert np.isfinite(m["loss"]), m
+        print("ELASTIC_OK", step, float(m["loss"]))
+    """).format(d=str(tmp_path / "el"))
+    env = dict(os.environ, PYTHONPATH="src")
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)) or ".")
+    assert "ELASTIC_OK" in p.stdout, p.stderr[-2000:]
+
+
+def test_prefetcher():
+    it = Prefetcher(iter(SyntheticLM(64, 8, 2, seed=1)), depth=2)
+    batches = [next(it) for _ in range(3)]
+    assert all(b["tokens"].shape == (2, 8) for b in batches)
+    # learnable structure: next token is an affine function within documents
+    b = batches[0]
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
