@@ -3,7 +3,9 @@ optimal in >99% of cases with ~100x fewer messages than exhaustive flooding;
 RandomNeighbor(k=1) reduces messages dramatically but loses quality.
 
 Event-driven simulator (core/simulator.py) on Waxman topologies; plus the
-BSP shard_map engine's async-equivalent message count for comparison.
+BSP shard_map engine's async-equivalent message count for comparison.  All
+solves go through the unified mapper engine (``repro.core.engine.solve``);
+message counts come from the unified ``Stats``.
 """
 from __future__ import annotations
 
@@ -11,10 +13,7 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    SimConfig, pathmap_exact, random_dataflow, simulate, waxman,
-)
-from repro.core.distributed import leastcost_shard_map
+from repro.core import SimConfig, pathmap_exact, random_dataflow, solve, waxman
 
 
 def run(n_instances: int = 25, n: int = 20, p: int = 6, seed0: int = 100,
@@ -52,7 +51,7 @@ def _run_one(n_instances, n, p, seed0):
         for name, cfg in policies:
             t0 = time.perf_counter()
             try:
-                m, st = simulate(rg, df, cfg)
+                m, st = solve(rg, df, method="simulate", cfg=cfg)
             except MemoryError:
                 continue
             stats[name]["t"] += time.perf_counter() - t0
@@ -61,8 +60,8 @@ def _run_one(n_instances, n, p, seed0):
                 stats[name]["found"] += 1
                 if abs(m.cost - ex.cost) < 1e-4:
                     stats[name]["opt"] += 1
-        _, dst = leastcost_shard_map(rg, df)
-        bsp_msgs.append(dst.messages_total)
+        _, dst = solve(rg, df, method="shard_map")
+        bsp_msgs.append(dst.messages_sent)
 
     rows = []
     base = np.mean(stats["exact"]["msgs"]) if stats["exact"]["msgs"] else float("nan")

@@ -12,8 +12,8 @@ import time
 import numpy as np
 
 from repro.core import (
-    barabasi_albert, leastcost_jax, leastcost_python, pathmap_exact,
-    random_dataflow, validate_mapping, waxman,
+    barabasi_albert, pathmap_exact, random_dataflow, solve, validate_mapping,
+    waxman,
 )
 
 
@@ -36,10 +36,10 @@ def run(n_instances: int = 40, sizes=(15, 25), p: int = 6, seed0: int = 0):
                     continue
                 feas += 1
                 t0 = time.perf_counter()
-                mp, pst = leastcost_python(rg, df)
+                mp, pst = solve(rg, df, method="leastcost_python")
                 t_py += time.perf_counter() - t0
                 t0 = time.perf_counter()
-                mj, jst = leastcost_jax(rg, df)
+                mj, jst = solve(rg, df, method="leastcost_jax")
                 t_jax += time.perf_counter() - t0
                 if mp is not None and abs(mp.cost - ex.cost) < 1e-4:
                     opt_py += 1

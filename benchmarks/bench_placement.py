@@ -1,16 +1,28 @@
-"""Placement-engine benchmark: BCPM planning for every assigned architecture
-on the 2-pod slice graph (quality = end-to-end route latency; time = solver
-wall clock, warm jit)."""
+"""Placement-engine benchmark.
+
+1. BCPM planning for every assigned architecture on the 2-pod slice graph
+   (quality = end-to-end route latency; time = solver wall clock, warm jit).
+2. Online multi-request placement service (``core.online.OnlinePlacer``):
+   micro-batched vmapped-DP throughput vs a sequential ``solve()`` loop on
+   the same request stream, plus an admission + churn exercise with
+   residual-capacity invariants checked.
+
+``python -m benchmarks.bench_placement [--smoke]`` writes the online-service
+numbers to ``BENCH_placement.json`` (the CI smoke artifact).
+"""
 from __future__ import annotations
 
+import json
 import time
 
-from repro.configs import ARCHS, get_config
+from repro.core import OnlinePlacer, random_dataflow, solve, solve_batch, waxman
 from repro.launch.placement import PodTopology, plan_pipeline
-from repro.models.config import SHAPES
 
 
-def run():
+def run_archs():
+    from repro.configs import ARCHS, get_config
+    from repro.models.config import SHAPES
+
     rows = []
     topo = PodTopology(pods=2)
     for arch in ARCHS:
@@ -30,3 +42,108 @@ def run():
             ),
         })
     return rows
+
+
+def _request_stream(rg, n_requests: int, p: int, seed0: int):
+    """Light concurrent requests: many fit the shared network at once."""
+    return [
+        random_dataflow(rg, p, seed=seed0 + i,
+                        creq_range=(0.02, 0.15), breq_range=(0.5, 4.0))
+        for i in range(n_requests)
+    ]
+
+
+def run_online(*, n: int = 24, p: int = 6, n_requests: int = 128,
+               micro_batch: int = 64, seed: int = 7,
+               out_path: str = "BENCH_placement.json"):
+    rg = waxman(n, seed=seed)
+    dfs = _request_stream(rg, n_requests, p, seed0=1000)
+
+    # warm both jit paths (single-request and batched shapes)
+    solve(rg, dfs[0], method="leastcost_jax")
+    solve_batch(rg, dfs[:micro_batch], method="leastcost_jax")
+
+    t0 = time.perf_counter()
+    seq = [solve(rg, df, method="leastcost_jax")[0] for df in dfs]
+    t_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    bat = []
+    for i in range(0, n_requests, micro_batch):
+        ms, _ = solve_batch(rg, dfs[i:i + micro_batch], method="leastcost_jax")
+        bat.extend(ms)
+    t_bat = time.perf_counter() - t0
+
+    agree = sum(
+        (a is None) == (b is None)
+        and (a is None or abs(a.cost - b.cost) < 1e-3)
+        for a, b in zip(seq, bat)
+    )
+
+    # admission + churn against residual capacity
+    placer = OnlinePlacer(rg)
+    tickets = []
+    for i in range(0, n_requests, micro_batch):
+        tickets.extend(placer.admit_many(dfs[i:i + micro_batch]))
+    placer.check_invariants()
+    admitted_stream = placer.stats.admitted  # before churn re-admissions
+    busiest = max(
+        (v for t in tickets if t for v in t.mapping.route
+         if v not in (t.df.src, t.df.dst)),
+        key=lambda v: sum(v in t.mapping.route for t in tickets if t),
+        default=0,
+    )
+    remapped, dropped = placer.fail_node(busiest)
+    placer.check_invariants()
+
+    record = {
+        "n": n, "p": p, "n_requests": n_requests, "micro_batch": micro_batch,
+        "sequential_s": t_seq, "batched_s": t_bat,
+        "speedup": t_seq / max(t_bat, 1e-9),
+        "agreement": agree / n_requests,
+        "admitted": admitted_stream,
+        "admitted_total": placer.stats.admitted,  # incl. churn re-admissions
+        "rejected": placer.stats.rejected,
+        "batch_conflicts": placer.stats.batch_conflicts,
+        "churn": {
+            "failed_node": int(busiest),
+            "displaced": len(remapped) + len(dropped),
+            "remapped": len(remapped),
+            "dropped": len(dropped),
+        },
+        "invariants_ok": True,
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def run():
+    rows = run_archs()
+    rec = run_online()
+    rows.append({
+        "name": "placement_online_service",
+        "us_per_call": 1e6 * rec["batched_s"] / rec["n_requests"],
+        "derived": (
+            f"speedup_batched={rec['speedup']:.1f}x;"
+            f"admitted={rec['admitted']}/{rec['n_requests']};"
+            f"agreement={rec['agreement']:.2f};"
+            f"churn_remapped={rec['churn']['remapped']}/"
+            f"{rec['churn']['displaced']}"
+        ),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="online service only, small sizes (CI artifact)")
+    args = ap.parse_args()
+    if args.smoke:
+        rec = run_online(n=24, n_requests=64, micro_batch=64)
+    else:
+        rec = run_online()
+    print(json.dumps(rec, indent=2))

@@ -1,7 +1,10 @@
 """Core: the paper's contribution — BCPM/BCDM mapping algorithms.
 
 Public API:
+  problem:     BIG sentinel + feasibility epsilons, shared precomputation
   graph:       ResourceGraph, DataflowPath, Mapping, validate_mapping
+  engine:      solve / solve_batch — ONE entry point over every backend
+  online:      OnlinePlacer — residual-capacity multi-request service
   exact:       pathmap_exact (paper Alg. 1-3), brute_force oracle
   leastcost:   leastcost_python (faithful §3.4.1), leastcost_jax (tensorized)
   simulator:   simulate (paper Alg. 4, async message passing, all §3.4 policies)
@@ -10,6 +13,7 @@ Public API:
   dag:         treemap_leastcost (paper §4 future-work extension)
   topology:    waxman / barabasi_albert (BRITE stand-ins), random_dataflow
 """
+from .problem import BIG  # noqa: F401
 from .graph import (  # noqa: F401
     DataflowPath,
     Mapping,
@@ -22,11 +26,14 @@ from .exact import ExactStats, brute_force, pathmap_exact  # noqa: F401
 from .leastcost import (  # noqa: F401
     HeuristicStats,
     leastcost_jax,
+    leastcost_jax_batched,
     leastcost_python,
 )
 from .simulator import SimConfig, SimStats, simulate  # noqa: F401
 from .heuristics import anneal_python, random_k_python  # noqa: F401
 from .dag import DataflowTree, TreeMapping, treemap_leastcost  # noqa: F401
+from .engine import Stats, backends, register, solve, solve_batch  # noqa: F401
+from .online import OnlinePlacer, OnlineStats, Ticket  # noqa: F401
 from .topology import (  # noqa: F401
     barabasi_albert,
     paper_example,

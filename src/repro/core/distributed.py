@@ -34,8 +34,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .graph import DataflowPath, Mapping, ResourceGraph, validate_mapping
-from .leastcost import BIG, HeuristicStats, _place_step, leastcost_python
+from .graph import DataflowPath, Mapping, ResourceGraph
+from .leastcost import HeuristicStats, _place_step
+from .problem import BIG, EPS_CAP_F32, EPS_IMPROVE, creq_prefix, finite_lat
+from .reconstruct import reconstruct_mapping
+
+# jax >= 0.6 promotes shard_map to the top-level namespace; older releases
+# (the pinned 0.4.x) only ship the experimental entry point.
+_shard_map = getattr(jax, "shard_map", None)
+_SHARD_MAP_KW: dict = {}
+if _shard_map is None:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # the experimental tracer has no replication rule for while_loop
+    _SHARD_MAP_KW = {"check_rep": False}
 
 
 @dataclasses.dataclass
@@ -69,7 +81,7 @@ def _dist_body(C, par_v, par_j, msg_tot, msg_x, cap_loc, lat_cols, bw_cols,
     P_all = jax.lax.all_gather(P_loc, axis, tiled=True)  # frontier exchange
     pj_all = jax.lax.all_gather(pj_loc, axis, tiled=True)
     Cmv, pv = _local_move(P_all, lat_cols, bw_cols, breq_k)
-    upd = Cmv < C - 1e-9
+    upd = Cmv < C - EPS_IMPROVE
     Cn = jnp.where(upd, Cmv, C)
     pj_of_pv = pj_all[pv, jnp.arange(C.shape[1])[None, :]]
     par_vn = jnp.where(upd, pv, par_v)
@@ -99,14 +111,12 @@ def leastcost_shard_map(
     n_pad = -(-n // D) * D
     stats = DistStats()
 
-    lat = np.where(np.isfinite(rg.lat), rg.lat, BIG).astype(np.float32)
-    np.fill_diagonal(lat, BIG)
     lat_p = np.full((n_pad, n_pad), BIG, np.float32)
-    lat_p[:n, :n] = lat
+    lat_p[:n, :n] = finite_lat(rg)
     bw_p = np.zeros((n_pad, n_pad), np.float32)
     bw_p[:n, :n] = rg.bw
     cap_p = _pad_to(rg.cap.astype(np.float32), n_pad, 0.0)
-    prefix = np.concatenate([[0.0], np.cumsum(df.creq)]).astype(np.float32)
+    prefix = creq_prefix(df).astype(np.float32)
     breq_k = np.concatenate([[BIG], df.breq, [BIG]]).astype(np.float32)
     finite_edge = np.isfinite(rg.lat) & ~np.eye(n, dtype=bool)
     out_deg = _pad_to(finite_edge.sum(1).astype(np.int32), n_pad, 0)
@@ -125,11 +135,12 @@ def leastcost_shard_map(
     rep = NamedSharding(mesh, P())
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(None, axis), P(None, axis),
                   P(), P(), P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis), P(), P()),
+        **_SHARD_MAP_KW,
     )
     def run(C, pv, pj, cap_loc, lat_cols, bw_cols, prefix, breq_k, out_deg, out_deg_x):
         def cond(s):
@@ -171,30 +182,13 @@ def leastcost_shard_map(
     stats.max_set_size = int(np.sum(C < BIG / 2))
 
     # finish: min over j<p with capacity for the tail on dst
-    feas = (np.arange(p + 1) < p) & (prefix[p] - prefix <= float(rg.cap[df.dst]) + 1e-6)
+    feas = (np.arange(p + 1) < p) & (
+        prefix[p] - prefix <= float(rg.cap[df.dst]) + EPS_CAP_F32
+    )
     final = np.where(feas, C[df.dst], BIG)
     best_j = int(np.argmin(final))
-    if final[best_j] >= BIG / 2:
-        return None, stats
-    assign = np.full(p, -1, np.int64)
-    assign[best_j:] = df.dst
-    w, k, route, guard = df.dst, best_j, [df.dst], 0
-    while not (w == df.src and k == 0):
-        v, j = int(par_v[w, k]), int(par_j[w, k])
-        if v < 0 or guard > n * (p + 2):
-            stats.validated = False
-            break
-        assign[j:k] = v
-        route.append(v)
-        w, k = v, j
-        guard += 1
-    route.reverse()
-    if stats.validated and assign.min() >= 0:
-        m = Mapping(tuple(int(a) for a in assign), tuple(route), float(final[best_j]))
-        ok, _ = validate_mapping(rg, df, m) if validate else (True, "")
-        stats.validated = bool(ok)
-        if ok:
-            return m, stats
-    stats.fallback_used = True
-    m, _ = leastcost_python(rg, df)
+    m = reconstruct_mapping(
+        rg, df, par_v, par_j, float(final[best_j]), best_j,
+        validate=validate, stats=stats,
+    )
     return m, stats

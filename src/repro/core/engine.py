@@ -1,0 +1,207 @@
+"""Unified mapper engine: one entry point over every solver backend.
+
+Before this module the repo had five solver backends with five incompatible
+call signatures (``simulator.simulate``, ``leastcost_python``,
+``heuristics.anneal/random_k``, ``leastcost_jax[_batched]``,
+``distributed.leastcost_shard_map``).  The engine registers each behind a
+name and exposes
+
+    solve(rg, df, method="leastcost_jax", **cfg) -> (Mapping | None, Stats)
+    solve_batch(rg, dfs, **cfg)                  -> (list[Mapping | None], Stats)
+
+with a single :class:`Stats` dataclass covering rounds / messages /
+set sizes / fallbacks across all backends, so callers (``launch/placement``,
+``core.online.OnlinePlacer``, benchmarks) never see a backend-specific API.
+
+Registered methods:
+
+  ``exact``             paper Alg. 1-3 (centralized PathMap; exponential)
+  ``simulate``          event-driven async simulator (Alg. 4); ``policy=``
+                        exact | leastcost | annealed | random_k
+  ``leastcost_python``  faithful path-carrying LeastCostMap (§3.4.1)
+  ``anneal``            AnnealedLeastCostMap (§3.4.2)
+  ``random_k``          RandomNeighbor (§3.4.3)
+  ``leastcost_jax``     tensorized (min,+) DP (TPU path via ``use_kernel``)
+  ``shard_map``         decentralized BSP engine on a JAX device mesh
+
+New backends register with :func:`register`; ``solve`` stays the only API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from .graph import DataflowPath, Mapping, ResourceGraph
+
+
+@dataclasses.dataclass
+class Stats:
+    """Backend-independent solve statistics.
+
+    Fields not meaningful for a backend keep their zero default (e.g. the
+    python relaxations send no messages; the simulator has no fallback).
+    """
+
+    method: str = ""
+    rounds: int = 0  # relaxation rounds / BSP supersteps
+    messages_sent: int = 0  # async messages, or BSP async-equivalent count
+    messages_processed: int = 0
+    messages_pruned: int = 0
+    messages_cross_device: int = 0  # BSP: messages crossing a partition
+    max_set_size: int = 0  # peak live partial-map states
+    maps_generated: int = 0
+    fallback_used: bool = False  # tensorized backends: path-carrying rescue
+    validated: bool = True
+    virtual_time: float = 0.0  # simulator virtual completion time
+    solve_ms: float = 0.0  # wall clock inside the backend
+    batch_size: int = 1
+
+
+def _unify(native, method: str) -> Stats:
+    """Map any backend's native stats object onto the unified Stats."""
+    s = Stats(method=method)
+    if native is None:
+        return s
+    s.rounds = int(getattr(native, "rounds", 0) or getattr(native, "supersteps", 0))
+    s.messages_sent = int(
+        getattr(native, "messages_sent", 0) or getattr(native, "messages_total", 0)
+    )
+    s.messages_processed = int(getattr(native, "messages_processed", 0))
+    s.messages_pruned = int(getattr(native, "messages_pruned", 0))
+    s.messages_cross_device = int(getattr(native, "messages_cross_device", 0))
+    s.max_set_size = int(getattr(native, "max_set_size", 0))
+    s.maps_generated = int(getattr(native, "total_maps_generated", 0))
+    s.fallback_used = bool(getattr(native, "fallback_used", False))
+    s.validated = bool(getattr(native, "validated", True))
+    s.virtual_time = float(
+        getattr(native, "completed_at", None) or getattr(native, "virtual_time", 0.0)
+    )
+    return s
+
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str):
+    """Register ``fn(rg, df, **cfg) -> (Mapping | None, native_stats)``."""
+
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def solve(
+    rg: ResourceGraph,
+    df: DataflowPath,
+    method: str = "leastcost_jax",
+    **cfg,
+) -> tuple[Optional[Mapping], Stats]:
+    """Solve one mapping request with the named backend."""
+    try:
+        fn = _REGISTRY[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown mapper backend {method!r}; registered: {backends()}"
+        ) from None
+    t0 = time.perf_counter()
+    mapping, native = fn(rg, df, **cfg)
+    stats = _unify(native, method)
+    stats.solve_ms = 1e3 * (time.perf_counter() - t0)
+    return mapping, stats
+
+
+def solve_batch(
+    rg: ResourceGraph,
+    dfs: list[DataflowPath],
+    method: str = "leastcost_jax",
+    **cfg,
+) -> tuple[list[Optional[Mapping]], Stats]:
+    """Solve many requests against one shared network.
+
+    ``leastcost_jax`` batches into a single vmapped DP (mixed-``p`` requests
+    are padded; see ``core.problem``); every other backend falls back to a
+    sequential loop through :func:`solve`.
+    """
+    if not dfs:
+        return [], Stats(method=method, batch_size=0)
+    t0 = time.perf_counter()
+    if method == "leastcost_jax":
+        from .leastcost import leastcost_jax_batched
+
+        stats = Stats(method=method)
+        mappings = leastcost_jax_batched(rg, list(dfs), stats=stats, **cfg)
+    else:
+        mappings = []
+        stats = Stats(method=method)
+        for df in dfs:
+            m, st = solve(rg, df, method=method, **cfg)
+            mappings.append(m)
+            stats.messages_sent += st.messages_sent
+            stats.rounds = max(stats.rounds, st.rounds)
+            stats.max_set_size = max(stats.max_set_size, st.max_set_size)
+            stats.fallback_used |= st.fallback_used
+    stats.batch_size = len(dfs)
+    stats.solve_ms = 1e3 * (time.perf_counter() - t0)
+    return mappings, stats
+
+
+# ---------------------------------------------------------------------------
+# Backend adapters
+# ---------------------------------------------------------------------------
+
+
+@register("exact")
+def _exact(rg, df, **cfg):
+    from .exact import pathmap_exact
+
+    return pathmap_exact(rg, df, **cfg)
+
+
+@register("simulate")
+def _simulate(rg, df, **cfg):
+    from .simulator import SimConfig, simulate
+
+    sim_cfg = cfg.pop("cfg", None) or SimConfig(**cfg)
+    return simulate(rg, df, sim_cfg)
+
+
+@register("leastcost_python")
+def _leastcost_python(rg, df, **cfg):
+    from .leastcost import leastcost_python
+
+    return leastcost_python(rg, df, **cfg)
+
+
+@register("anneal")
+def _anneal(rg, df, **cfg):
+    from .heuristics import anneal_python
+
+    return anneal_python(rg, df, **cfg)
+
+
+@register("random_k")
+def _random_k(rg, df, **cfg):
+    from .heuristics import random_k_python
+
+    return random_k_python(rg, df, **cfg)
+
+
+@register("leastcost_jax")
+def _leastcost_jax(rg, df, **cfg):
+    from .leastcost import leastcost_jax
+
+    return leastcost_jax(rg, df, **cfg)
+
+
+@register("shard_map")
+def _shard_map_backend(rg, df, **cfg):
+    from .distributed import leastcost_shard_map
+
+    return leastcost_shard_map(rg, df, **cfg)

@@ -21,6 +21,7 @@ from typing import Optional
 import numpy as np
 
 from .graph import DataflowPath, Mapping, ResourceGraph, mapping_cost
+from .problem import EPS_BW, EPS_CAP
 
 
 @dataclasses.dataclass
@@ -34,7 +35,7 @@ class ExactStats:
 
 def _extend_ok(df: DataflowPath, rg: ResourceGraph, j: int, x: int, v: int) -> bool:
     """Paper Alg. 3 (Extend): can dataflow nodes j..j+x-1 be placed on v?"""
-    return float(np.sum(df.creq[j : j + x])) <= float(rg.cap[v]) + 1e-9
+    return float(np.sum(df.creq[j : j + x])) <= float(rg.cap[v]) + EPS_CAP
 
 
 def pathmap_exact(
@@ -90,7 +91,7 @@ def pathmap_exact(
                 keys = fresh.get((u, j))
                 if not keys:
                     continue  # Relax line 6: only maps new in the last iteration
-                if float(rg.bw[u, v]) + 1e-9 < float(df.breq[j - 1]):
+                if float(rg.bw[u, v]) + EPS_BW < float(df.breq[j - 1]):
                     continue  # Relax line 5: bandwidth of dataflow edge (j-1, j)
                 for (assign, route) in keys:
                     cost = M[u][j][(assign, route)]
@@ -169,7 +170,7 @@ def brute_force(
             for b, c in enumerate(counts):
                 if float(np.sum(df.creq[len(assign) : len(assign) + c])) > float(
                     rg.cap[route[b]]
-                ) + 1e-9:
+                ) + EPS_CAP:
                     ok = False
                     break
                 assign.extend([route[b]] * int(c))
@@ -178,7 +179,7 @@ def brute_force(
             prefix = np.cumsum(counts)
             for b in range(L - 1):
                 k = int(prefix[b])  # nodes placed before the hop
-                if float(rg.bw[route[b], route[b + 1]]) + 1e-9 < float(df.breq[k - 1]):
+                if float(rg.bw[route[b], route[b + 1]]) + EPS_BW < float(df.breq[k - 1]):
                     ok = False
                     break
             if not ok:

@@ -150,6 +150,8 @@ def validate_mapping(
       bw >= breq[i];
     - cost consistent with route latency.
     """
+    from .problem import EPS_CAP_F32  # function-local: graph is problem's dep
+
     assign, route = mapping.assign, mapping.route
     p = df.p
     if len(assign) != p:
@@ -176,7 +178,7 @@ def validate_mapping(
     for i, v in enumerate(assign):
         used[v] = used.get(v, 0.0) + float(df.creq[i])
     for v, c in used.items():
-        if c > float(rg.cap[v]) + 1e-6:
+        if c > float(rg.cap[v]) + EPS_CAP_F32:
             return False, f"capacity exceeded at node {v}"
     # Bandwidth: walk the route; dataflow edge index advances when the
     # assigned node changes.  Pass-through hops carry the current edge.
@@ -187,7 +189,7 @@ def validate_mapping(
             pos += 1
         if pos >= p - 1:
             return False, "route continues past sink"
-        if float(rg.bw[u, v]) + 1e-6 < float(df.breq[pos]):
+        if float(rg.bw[u, v]) + EPS_CAP_F32 < float(df.breq[pos]):
             return False, f"bandwidth violated on ({u},{v}) for dataflow edge {pos}"
     expect = mapping_cost(rg, route)
     if abs(expect - mapping.cost) > 1e-4 * max(1.0, abs(expect)):

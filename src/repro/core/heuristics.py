@@ -15,6 +15,7 @@ import numpy as np
 
 from .graph import DataflowPath, Mapping, ResourceGraph
 from .leastcost import HeuristicStats
+from .problem import EPS_BW, EPS_COST, make_cap_ok
 
 
 def _run(
@@ -32,10 +33,7 @@ def _run(
     src, dst = df.src, df.dst
     rng = np.random.default_rng(seed)
     stats = HeuristicStats()
-    creq_prefix = np.concatenate([[0.0], np.cumsum(df.creq)])
-
-    def cap_ok(j, kk, v):
-        return creq_prefix[kk] - creq_prefix[j] <= float(rg.cap[v]) + 1e-9
+    cap_ok = make_cap_ok(rg, df)
 
     # M[u][j] = list of (cost, assign, route); index 0 is the incumbent min.
     M: list[list[list]] = [[[] for _ in range(p + 1)] for _ in range(n)]
@@ -62,7 +60,7 @@ def _run(
                 for v in nbrs:
                     if v in route:
                         continue
-                    if float(rg.bw[u, v]) + 1e-9 < float(df.breq[j - 1]):
+                    if float(rg.bw[u, v]) + EPS_BW < float(df.breq[j - 1]):
                         continue
                     ncost = cost + float(rg.lat[u, v])
                     if v == dst:
@@ -77,7 +75,7 @@ def _run(
                         jj = j + x
                         entry = (ncost, assign + (v,) * x, route + (v,))
                         cur = M[v][jj]
-                        if not cur or ncost < cur[0][0] - 1e-12:
+                        if not cur or ncost < cur[0][0] - EPS_COST:
                             cur.insert(0, entry)
                             del cur[max_keep:]
                             stats.total_maps_generated += 1

@@ -16,10 +16,12 @@
    iterated to fixpoint (<= n-1 supersteps, Lemma 3.2).  The move step is the
    bandwidth-masked min-plus matmul implemented as a Pallas TPU kernel in
    ``repro.kernels.minplus`` (the jnp path here is the oracle / CPU path).
-   Parent pointers are tracked for reconstruction; the reconstructed mapping
-   is validated (the DP does not carry visited sets, so a route that places
-   compute on one node across two visits — possible only in adversarial
-   instances — is caught and the path-carrying fallback is used).
+   Parent pointers are tracked for reconstruction; anomaly handling (broken
+   chain / revisit) lives in ``core.reconstruct``.
+
+Shared constants/tensors come from ``core.problem``; ``leastcost_jax_batched``
+solves many (possibly mixed-``p``) requests on one shared network in a single
+vmapped DP — the continuous-arrival path behind ``core.online.OnlinePlacer``.
 """
 from __future__ import annotations
 
@@ -39,8 +41,18 @@ from .graph import (
     mapping_cost,
     validate_mapping,
 )
-
-BIG = np.float32(1e18)  # finite stand-in for +inf inside kernels (min-plus safe)
+from .problem import (
+    BIG,
+    EPS_BW,
+    EPS_CAP_F32,
+    EPS_COST,
+    EPS_IMPROVE,
+    make_cap_ok,
+    problem_tensors,
+    stack_requests,
+    BATCH_IN_AXES,
+)
+from .reconstruct import reconstruct_mapping
 
 
 @dataclasses.dataclass
@@ -67,10 +79,7 @@ def leastcost_python(
     M: list[list[Optional[tuple]]] = [[None] * (p + 1) for _ in range(n)]
     best: Optional[Mapping] = None
 
-    creq_prefix = np.concatenate([[0.0], np.cumsum(df.creq)])
-
-    def cap_ok(j, k, v):  # place nodes j..k-1 on v
-        return creq_prefix[k] - creq_prefix[j] <= float(rg.cap[v]) + 1e-9
+    cap_ok = make_cap_ok(rg, df)
 
     for j in range(1, p):
         if not cap_ok(0, j, src):
@@ -89,7 +98,7 @@ def leastcost_python(
             for j in range(1, p):
                 if (u, j) not in fresh or M[u][j] is None:
                     continue
-                if float(rg.bw[u, v]) + 1e-9 < float(df.breq[j - 1]):
+                if float(rg.bw[u, v]) + EPS_BW < float(df.breq[j - 1]):
                     continue
                 cost, assign, route = M[u][j]
                 if v in route:
@@ -105,7 +114,7 @@ def leastcost_python(
                         if not cap_ok(j, j + x, v):
                             break
                         cur = M[v][j + x]
-                        if cur is None or ncost < cur[0] - 1e-12:
+                        if cur is None or ncost < cur[0] - EPS_COST:
                             M[v][j + x] = (ncost, assign + (v,) * x, route + (v,))
                             stats.total_maps_generated += 1
                             new_fresh.add((v, j + x))
@@ -121,22 +130,6 @@ def leastcost_python(
 # ---------------------------------------------------------------------------
 # 2. Tensorized JAX DP (beyond paper)
 # ---------------------------------------------------------------------------
-
-
-def problem_tensors(rg: ResourceGraph, df: DataflowPath) -> dict:
-    """Dense float32 tensors for the DP/kernels. INF replaced by BIG."""
-    lat = np.where(np.isfinite(rg.lat), rg.lat, BIG).astype(np.float32)
-    np.fill_diagonal(lat, BIG)  # moves never stay in place (place step does)
-    s = np.concatenate([[0.0], np.cumsum(df.creq)]).astype(np.float32)
-    return dict(
-        cap=jnp.asarray(rg.cap),
-        bw=jnp.asarray(rg.bw),
-        lat=jnp.asarray(lat),
-        prefix=jnp.asarray(s),  # (p+1,)
-        breq=jnp.asarray(df.breq.astype(np.float32)),  # (p-1,)
-        src=jnp.asarray(df.src, jnp.int32),
-        dst=jnp.asarray(df.dst, jnp.int32),
-    )
 
 
 def _place_step(C, cap, prefix):
@@ -156,7 +149,7 @@ def _place_step(C, cap, prefix):
             valid_j[None, :], jnp.roll(C, x, axis=1), BIG
         )  # shifted[v,k] = C[v,k-x]
         block = prefix[k_idx] - prefix[jnp.maximum(j_idx, 0)]
-        feas = valid_j[None, :] & (block[None, :] <= cap[:, None] + 1e-6)
+        feas = valid_j[None, :] & (block[None, :] <= cap[:, None] + EPS_CAP_F32)
         cand = jnp.where(feas, shifted, BIG)
         upd = cand < P
         P = jnp.where(upd, cand, P)
@@ -212,7 +205,7 @@ def _superstep(state, tensors, move_fn, place_fn=None):
     place = place_fn or _place_step
     P, pj = place(C, tensors["cap"], tensors["prefix"])
     Cmv, pv = move_fn(P, tensors["lat"], tensors["bw"], tensors["breq"])
-    upd = Cmv < C - 1e-9
+    upd = Cmv < C - EPS_IMPROVE
     Cn = jnp.where(upd, Cmv, C)
     # parent arrival state of (w,k) is (pv[w,k], pj[pv[w,k],k])
     pj_of_pv = pj[pv, jnp.arange(C.shape[1])[None, :]]
@@ -223,6 +216,10 @@ def _superstep(state, tensors, move_fn, place_fn=None):
 
 @functools.partial(jax.jit, static_argnames=("n", "p", "max_rounds", "use_kernel"))
 def _leastcost_dp(tensors, n: int, p: int, max_rounds: int, use_kernel: bool = False):
+    """Run the relaxation to fixpoint.  ``p`` is the static column count;
+    ``tensors["p_eff"]`` is the (possibly traced, per-request) true dataflow
+    length — the final reduction at ``dst`` only reads columns ``< p_eff``,
+    so padded mixed-``p`` batches share one compiled DP."""
     if use_kernel:
         from repro.kernels.minplus import ops as minplus_ops
         from repro.kernels.place import ops as place_ops
@@ -252,11 +249,12 @@ def _leastcost_dp(tensors, n: int, p: int, max_rounds: int, use_kernel: bool = F
     t, (C, par_v, par_j, _) = jax.lax.while_loop(
         cond, body, (0, (C0, par_v0, par_j0, jnp.array(True)))
     )
-    # answer: min over j<p of C[dst, j] + place nodes j..p-1 on dst
+    # answer: min over j<p_eff of C[dst, j] + place nodes j..p_eff-1 on dst
     prefix = tensors["prefix"]
+    p_eff = tensors.get("p_eff", jnp.asarray(p, jnp.int32))
     j_idx = jnp.arange(p + 1)
     cap_dst = tensors["cap"][tensors["dst"]]
-    feas = (j_idx < p) & (prefix[p] - prefix[j_idx] <= cap_dst + 1e-6)
+    feas = (j_idx < p_eff) & (prefix[p_eff] - prefix[j_idx] <= cap_dst + EPS_CAP_F32)
     final = jnp.where(feas, C[tensors["dst"], :], BIG)
     best_j = jnp.argmin(final)
     return C, par_v, par_j, final[best_j], best_j, t
@@ -267,66 +265,44 @@ def leastcost_jax_batched(
     dfs: list,
     *,
     validate: bool = True,
+    max_rounds: Optional[int] = None,
+    use_kernel: bool = False,
+    stats=None,
 ) -> list:
     """Solve many mapping requests on ONE shared resource network in a
     single vmapped DP (§Perf C6): the realistic continuous-arrival case —
     link matrices are shared across the batch, so the per-request marginal
-    cost is one (n, p) state tensor.  Returns a list of (Mapping|None)."""
+    cost is one (n, p_max) state tensor.  Requests of mixed ``p`` are padded
+    (``core.problem.pad_request``).  Returns a list of (Mapping | None).
+
+    ``stats`` (optional, e.g. the engine's unified ``Stats``) aggregates
+    anomaly signals across the batch: ``fallback_used`` is set if ANY
+    request needed the path-carrying rescue, ``validated`` cleared if ANY
+    reconstruction failed validation."""
     assert dfs
     n = rg.n
-    p = dfs[0].p
-    assert all(d.p == p for d in dfs), "batched requests must share p"
-    base = problem_tensors(rg, dfs[0])
-    stk = {
-        "prefix": jnp.stack([
-            jnp.asarray(np.concatenate([[0.0], np.cumsum(d.creq)]).astype(np.float32))
-            for d in dfs
-        ]),
-        "breq": jnp.stack([jnp.asarray(d.breq.astype(np.float32)) for d in dfs]),
-        "src": jnp.asarray([d.src for d in dfs], jnp.int32),
-        "dst": jnp.asarray([d.dst for d in dfs], jnp.int32),
-    }
-    tensors = dict(base, **stk)
-    in_axes = ({"cap": None, "bw": None, "lat": None, "prefix": 0, "breq": 0,
-                "src": 0, "dst": 0},)
+    tensors, p_max = stack_requests(rg, dfs)
+    max_rounds = max_rounds or (n - 1 if n > 1 else 1)
     fn = jax.vmap(
-        lambda t: _leastcost_dp(t, n=n, p=p, max_rounds=n - 1, use_kernel=False),
-        in_axes=in_axes,
+        lambda t: _leastcost_dp(t, n=n, p=p_max, max_rounds=max_rounds,
+                                use_kernel=use_kernel),
+        in_axes=(BATCH_IN_AXES,),
     )
     C, par_v, par_j, best_cost, best_j, _ = fn(tensors)
+    par_v, par_j = np.asarray(par_v), np.asarray(par_j)
     out = []
     for i, df in enumerate(dfs):
-        out.append(_reconstruct(rg, df, np.asarray(C[i]), np.asarray(par_v[i]),
-                                np.asarray(par_j[i]), float(best_cost[i]),
-                                int(best_j[i]), validate))
+        per = HeuristicStats()
+        out.append(
+            reconstruct_mapping(
+                rg, df, par_v[i], par_j[i], float(best_cost[i]), int(best_j[i]),
+                validate=validate, stats=per,
+            )
+        )
+        if stats is not None:
+            stats.fallback_used |= per.fallback_used
+            stats.validated &= per.validated
     return out
-
-
-def _reconstruct(rg, df, C, par_v, par_j, best_cost, best_j, validate):
-    n, p = rg.n, df.p
-    if best_cost >= BIG / 2:
-        return None
-    assign = np.full(p, -1, np.int64)
-    k = best_j
-    assign[k:p] = df.dst
-    w, route, guard = df.dst, [df.dst], 0
-    ok = True
-    while not (w == df.src and k == 0):
-        v, j = int(par_v[w, k]), int(par_j[w, k])
-        if v < 0 or guard > n * (p + 2):
-            ok = False
-            break
-        assign[j:k] = v
-        route.append(v)
-        w, k = v, j
-        guard += 1
-    route.reverse()
-    if ok and assign.min() >= 0:
-        m = Mapping(tuple(int(a) for a in assign), tuple(route), best_cost)
-        if not validate or validate_mapping(rg, df, m)[0]:
-            return m
-    m, _ = leastcost_python(rg, df)
-    return m
 
 
 def leastcost_jax(
@@ -349,35 +325,10 @@ def leastcost_jax(
     stats.max_set_size = int(np.sum(np.asarray(C) < BIG / 2))
     if float(best_cost) >= BIG / 2:
         return None, stats
-    # Reconstruct by backtracking parent pointers (numpy).
-    par_v = np.asarray(par_v)
-    par_j = np.asarray(par_j)
-    assign = np.full(p, -1, np.int64)
-    k = int(best_j)
-    assign[k:p] = df.dst
-    w = df.dst
-    route = [df.dst]
-    guard = 0
-    while not (w == df.src and k == 0):
-        v, j = int(par_v[w, k]), int(par_j[w, k])
-        if v < 0 or guard > n * (p + 2):
-            stats.validated = False
-            break
-        assign[j:k] = v
-        route.append(v)
-        w, k = v, j
-        guard += 1
-    route.reverse()
-    if stats.validated and assign.min() >= 0:
-        m = Mapping(tuple(int(a) for a in assign), tuple(route), float(best_cost))
-        ok = True
-        if validate:
-            ok, _reason = validate_mapping(rg, df, m)
-            stats.validated = bool(ok)
-        if ok:
-            return m, stats
-    # Revisit anomaly or broken chain: fall back to the sound path-carrying
-    # version (rare; counted in benchmarks).
-    stats.fallback_used = True
-    m, _ = leastcost_python(rg, df)
+    # Backtrack parent pointers; on a broken chain or revisit anomaly the
+    # sound path-carrying version is substituted (rare; counted in stats).
+    m = reconstruct_mapping(
+        rg, df, par_v, par_j, float(best_cost), int(best_j),
+        validate=validate, stats=stats,
+    )
     return m, stats

@@ -1,0 +1,273 @@
+"""Online multi-request placement service (the paper's dynamicity regime).
+
+The paper's setting is *long-running* data-flow applications on a *dynamic*
+network: mapping is not a one-shot solve but a continuous service admitting
+a stream of requests against **residual** capacity (cf. Benoit et al. 2009,
+Eidenbenz & Locher 2016 — concurrent in-network stream processing).
+
+:class:`OnlinePlacer` owns a residual-capacity view of a
+:class:`ResourceGraph` and provides:
+
+- ``admit(df)`` / ``release(ticket)`` — placement against the residual
+  network with capacity *and* bandwidth commit; rollback-free because a
+  mapping is only committed after validating against the residual;
+- ``admit_many(dfs)`` — micro-batches concurrent arrivals into a single
+  vmapped DP (``engine.solve_batch`` -> ``leastcost_jax_batched``; mixed-p
+  requests are padded, see ``core.problem``).  Batched solves share one
+  residual snapshot, so each result is re-validated against the *current*
+  residual before committing; conflicting requests are re-solved
+  individually — optimistic concurrency at micro-batch granularity;
+- ``fail_node`` / ``fail_link`` (+ ``restore_*``) — simulated churn.  A
+  failure displaces every ticket whose route uses the failed element; the
+  placer releases them and re-admits on the degraded residual network,
+  returning (remapped, dropped) — the paper's dynamic re-mapping scenario
+  served at throughput.
+
+Invariant (checked by ``check_invariants``): for every node and link,
+``base == residual + sum(ticket loads)`` and ``residual >= 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from . import engine
+from .graph import INF, DataflowPath, Mapping, ResourceGraph, validate_mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class Ticket:
+    """A committed placement: the handle for ``release`` / churn re-mapping."""
+
+    tid: int
+    df: DataflowPath
+    mapping: Mapping
+    node_load: dict  # resource node -> committed compute
+    edge_load: dict  # (u, v) -> committed bandwidth
+
+
+@dataclasses.dataclass
+class OnlineStats:
+    admitted: int = 0
+    rejected: int = 0
+    released: int = 0
+    remapped: int = 0
+    dropped: int = 0
+    batches: int = 0
+    batch_conflicts: int = 0  # re-solved individually after a stale batch solve
+    solve_ms: float = 0.0
+
+
+def _edge_loads(df: DataflowPath, mapping: Mapping) -> dict:
+    """Bandwidth committed per directed resource link: walk the route; the
+    carried dataflow edge advances when the assigned node changes (the same
+    walk as ``validate_mapping``)."""
+    loads: dict = {}
+    assign, route = mapping.assign, mapping.route
+    pos = 0
+    for u, v in zip(route[:-1], route[1:]):
+        while pos + 1 < df.p and assign[pos + 1] == u:
+            pos += 1
+        loads[(u, v)] = loads.get((u, v), 0.0) + float(df.breq[pos])
+    return loads
+
+
+def _node_loads(df: DataflowPath, mapping: Mapping) -> dict:
+    loads: dict = {}
+    for i, v in enumerate(mapping.assign):
+        loads[v] = loads.get(v, 0.0) + float(df.creq[i])
+    return loads
+
+
+class OnlinePlacer:
+    """Residual-capacity placement service over one resource network."""
+
+    def __init__(
+        self,
+        rg: ResourceGraph,
+        *,
+        method: str = "leastcost_jax",
+        **solve_cfg,
+    ):
+        self.base = rg
+        self.method = method
+        self.solve_cfg = solve_cfg
+        n = rg.n
+        self.cap = rg.cap.astype(np.float64).copy()
+        self.bw = rg.bw.astype(np.float64).copy()
+        self.node_up = np.ones(n, bool)
+        self.link_up = np.isfinite(rg.lat) & ~np.eye(n, dtype=bool)
+        self.tickets: dict[int, Ticket] = {}
+        self.stats = OnlineStats()
+        self._tid = itertools.count()
+
+    # -- residual view ------------------------------------------------------
+
+    def residual_graph(self) -> ResourceGraph:
+        """The network the next solve sees: committed capacity subtracted,
+        failed nodes/links removed (cap 0 / bw 0 / lat INF)."""
+        n = self.base.n
+        up2 = self.node_up[:, None] & self.node_up[None, :]
+        alive = self.link_up & up2
+        cap = np.where(self.node_up, self.cap, 0.0).astype(np.float32)
+        bw = np.where(alive, self.bw, 0.0).astype(np.float32)
+        lat = np.where(alive, self.base.lat, INF).astype(np.float32)
+        np.fill_diagonal(lat, 0.0)
+        return ResourceGraph(cap, bw, lat)
+
+    def utilization(self) -> dict:
+        base_cap = float(np.sum(self.base.cap))
+        return {
+            "nodes_committed": 1.0 - float(np.sum(self.cap)) / max(base_cap, 1e-12),
+            "tickets": len(self.tickets),
+            "nodes_down": int(np.sum(~self.node_up)),
+        }
+
+    # -- commit / release ---------------------------------------------------
+
+    def _commit(self, df: DataflowPath, mapping: Mapping) -> Ticket:
+        node_load = _node_loads(df, mapping)
+        edge_load = _edge_loads(df, mapping)
+        for v, c in node_load.items():
+            self.cap[v] -= c
+        for (u, v), b in edge_load.items():
+            self.bw[u, v] -= b
+        t = Ticket(next(self._tid), df, mapping, node_load, edge_load)
+        self.tickets[t.tid] = t
+        return t
+
+    def release(self, ticket: Ticket | int) -> None:
+        tid = ticket if isinstance(ticket, int) else ticket.tid
+        t = self.tickets.pop(tid)
+        for v, c in t.node_load.items():
+            self.cap[v] += c
+        for (u, v), b in t.edge_load.items():
+            self.bw[u, v] += b
+        self.stats.released += 1
+
+    # -- admission ----------------------------------------------------------
+
+    def _admissible(self, df: DataflowPath, mapping: Optional[Mapping],
+                    rg: ResourceGraph) -> bool:
+        if mapping is None:
+            return False
+        ok, _why = validate_mapping(rg, df, mapping)
+        return ok
+
+    def admit(self, df: DataflowPath) -> Optional[Ticket]:
+        """Place one request against the current residual network."""
+        if not (self.node_up[df.src] and self.node_up[df.dst]):
+            self.stats.rejected += 1
+            return None
+        rg = self.residual_graph()
+        mapping, st = engine.solve(rg, df, method=self.method, **self.solve_cfg)
+        self.stats.solve_ms += st.solve_ms
+        if not self._admissible(df, mapping, rg):
+            self.stats.rejected += 1
+            return None
+        self.stats.admitted += 1
+        return self._commit(df, mapping)
+
+    def admit_many(self, dfs: list[DataflowPath]) -> list[Optional[Ticket]]:
+        """Micro-batch concurrent arrivals into one vmapped DP.
+
+        All requests solve against one residual snapshot; commits are
+        serialized, and any mapping invalidated by an earlier commit in the
+        same batch is re-solved individually on the fresh residual.
+        """
+        if not dfs:
+            return []
+        self.stats.batches += 1
+        snapshot = self.residual_graph()
+        mappings, st = engine.solve_batch(
+            snapshot, list(dfs), method=self.method, **self.solve_cfg
+        )
+        self.stats.solve_ms += st.solve_ms
+        out: list[Optional[Ticket]] = []
+        current = snapshot  # refreshed only on commit (the only mutation)
+        for df, m in zip(dfs, mappings):
+            if (
+                m is not None
+                and self.node_up[df.src]
+                and self.node_up[df.dst]
+                and self._admissible(df, m, current)
+            ):
+                self.stats.admitted += 1
+                out.append(self._commit(df, m))
+                current = self.residual_graph()
+            elif m is not None:
+                # stale snapshot (an earlier commit in this batch took the
+                # capacity) — optimistic-concurrency retry, individually
+                self.stats.batch_conflicts += 1
+                t = self.admit(df)
+                out.append(t)
+                if t is not None:
+                    current = self.residual_graph()
+            else:
+                self.stats.rejected += 1
+                out.append(None)
+        return out
+
+    # -- churn --------------------------------------------------------------
+
+    def _displaced(self, pred) -> list[Ticket]:
+        return [t for t in self.tickets.values() if pred(t)]
+
+    def _remap(self, displaced: list[Ticket]) -> tuple[list[Ticket], list[DataflowPath]]:
+        for t in displaced:
+            self.release(t)
+        remapped, dropped = [], []
+        tickets = self.admit_many([t.df for t in displaced])
+        for t, nt in zip(displaced, tickets):
+            if nt is None:
+                dropped.append(t.df)
+                self.stats.dropped += 1
+            else:
+                remapped.append(nt)
+                self.stats.remapped += 1
+        return remapped, dropped
+
+    def fail_node(self, v: int) -> tuple[list[Ticket], list[DataflowPath]]:
+        """Take node ``v`` down; re-map every placement routed through it."""
+        self.node_up[v] = False
+        return self._remap(self._displaced(lambda t: v in t.mapping.route))
+
+    def fail_link(self, u: int, v: int) -> tuple[list[Ticket], list[DataflowPath]]:
+        """Take the (symmetric) link down; re-map placements using it."""
+        self.link_up[u, v] = self.link_up[v, u] = False
+        return self._remap(
+            self._displaced(
+                lambda t: (u, v) in t.edge_load or (v, u) in t.edge_load
+            )
+        )
+
+    def restore_node(self, v: int) -> None:
+        self.node_up[v] = True
+
+    def restore_link(self, u: int, v: int) -> None:
+        up = np.isfinite(self.base.lat[u, v])
+        self.link_up[u, v] = self.link_up[v, u] = bool(up)
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_invariants(self, atol: float = 1e-4) -> None:
+        """base == residual + sum(ticket loads), residual >= 0, everywhere."""
+        n = self.base.n
+        cap_used = np.zeros(n)
+        bw_used = np.zeros((n, n))
+        for t in self.tickets.values():
+            for v, c in t.node_load.items():
+                cap_used[v] += c
+            for (u, v), b in t.edge_load.items():
+                bw_used[u, v] += b
+        assert np.allclose(self.cap + cap_used, self.base.cap, atol=atol), (
+            "node capacity conservation violated"
+        )
+        assert np.allclose(self.bw + bw_used, self.base.bw, atol=atol), (
+            "link bandwidth conservation violated"
+        )
+        assert np.all(self.cap >= -atol), "negative residual capacity"
+        assert np.all(self.bw >= -atol), "negative residual bandwidth"

@@ -1,0 +1,128 @@
+"""Shared problem machinery for every BCPM solver backend.
+
+Single source of truth for
+
+- the numerical constants: the finite ``BIG`` sentinel that stands in for
+  +inf inside min-plus kernels, and the feasibility epsilons that were
+  previously re-declared (inconsistently: 1e-9 vs 1e-6 vs 1e-12) in
+  ``core/leastcost.py``, ``core/simulator.py``, ``core/heuristics.py``,
+  ``core/exact.py`` and both Pallas kernel packages;
+- the per-instance precomputation every backend used to re-derive
+  independently: capacity prefix sums + the ``cap_ok`` window test, and the
+  dense float32 tensors consumed by the tensorized DP / Pallas kernels;
+- request padding/stacking for the micro-batched multi-request DP
+  (``core.engine.solve_batch`` / ``core.online.OnlinePlacer``): requests of
+  *mixed* length ``p`` share one vmapped DP by padding the capacity prefix
+  (repeat last value — trailing ghost nodes cost nothing) and the bandwidth
+  requirements (``BIG`` — ghost dataflow edges admit no move), with the true
+  length carried as a per-request ``p_eff`` scalar read only by the final
+  reduction at ``dst``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import DataflowPath, ResourceGraph
+
+BIG = np.float32(1e18)  # finite stand-in for +inf inside kernels (min-plus safe)
+
+# Feasibility slacks.  Scalar/python relaxations accumulate in float64 and use
+# the tight slack; float32 tensor paths and end-to-end mapping validation use
+# the loose one (float32 prefix sums lose ~7 digits).  ``EPS_COST`` is the
+# strict-improvement tie-break of the python relaxations; ``EPS_IMPROVE`` the
+# monotone-update threshold of the float32 DP.
+EPS_CAP = 1e-9
+EPS_CAP_F32 = 1e-6
+EPS_BW = 1e-9
+EPS_COST = 1e-12
+EPS_IMPROVE = 1e-9
+
+
+def creq_prefix(df: DataflowPath) -> np.ndarray:
+    """(p+1,) float64 prefix sums of compute requirements; prefix[k]-prefix[j]
+    is the load of placing dataflow nodes j..k-1 on one resource node."""
+    return np.concatenate([[0.0], np.cumsum(df.creq)])
+
+
+def make_cap_ok(rg: ResourceGraph, df: DataflowPath):
+    """The capacity window test shared by all scalar relaxations:
+    ``cap_ok(j, k, v)`` — can dataflow nodes j..k-1 be placed on node v?"""
+    prefix = creq_prefix(df)
+
+    def cap_ok(j: int, k: int, v: int) -> bool:
+        return prefix[k] - prefix[j] <= float(rg.cap[v]) + EPS_CAP
+
+    return cap_ok
+
+
+def finite_lat(rg: ResourceGraph) -> np.ndarray:
+    """Latency matrix with INF -> BIG and a BIG diagonal (moves never stay
+    in place; the place step handles co-location)."""
+    lat = np.where(np.isfinite(rg.lat), rg.lat, BIG).astype(np.float32)
+    np.fill_diagonal(lat, BIG)
+    return lat
+
+
+def problem_tensors(rg: ResourceGraph, df: DataflowPath) -> dict:
+    """Dense float32 tensors for the DP/kernels. INF replaced by BIG."""
+    import jax.numpy as jnp  # deferred: numpy-only callers never touch jax
+
+    s = creq_prefix(df).astype(np.float32)
+    return dict(
+        cap=jnp.asarray(rg.cap),
+        bw=jnp.asarray(rg.bw),
+        lat=jnp.asarray(finite_lat(rg)),
+        prefix=jnp.asarray(s),  # (p+1,)
+        breq=jnp.asarray(df.breq.astype(np.float32)),  # (p-1,)
+        src=jnp.asarray(df.src, jnp.int32),
+        dst=jnp.asarray(df.dst, jnp.int32),
+        p_eff=jnp.asarray(df.p, jnp.int32),
+    )
+
+
+def pad_request(df: DataflowPath, p_max: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pad one request's (prefix, breq) to the batch-wide ``p_max``.
+
+    The prefix repeats its final value (ghost nodes require no compute) and
+    breq pads with BIG (no link can carry a ghost dataflow edge, so the DP
+    never extends a route past the request's true sink column).  Columns
+    beyond ``p_eff`` are unreachable garbage the final reduction never reads.
+    """
+    p = df.p
+    assert p <= p_max
+    prefix = creq_prefix(df).astype(np.float32)
+    prefix = np.concatenate([prefix, np.full(p_max - p, prefix[-1], np.float32)])
+    breq = np.concatenate(
+        [df.breq.astype(np.float32), np.full(p_max - p, BIG, np.float32)]
+    )
+    return prefix, breq[: p_max - 1]
+
+
+def stack_requests(rg: ResourceGraph, dfs: list[DataflowPath]) -> tuple[dict, int]:
+    """Stack mixed-``p`` requests against one shared resource network into
+    the batched tensor dict for the vmapped DP.  Returns (tensors, p_max);
+    link matrices are shared (axis None under vmap), per-request tensors are
+    stacked on axis 0."""
+    import jax.numpy as jnp
+
+    assert dfs
+    p_max = max(d.p for d in dfs)
+    padded = [pad_request(d, p_max) for d in dfs]
+    base = problem_tensors(rg, dfs[0])
+    tensors = dict(
+        cap=base["cap"],
+        bw=base["bw"],
+        lat=base["lat"],
+        prefix=jnp.asarray(np.stack([pr for pr, _ in padded])),
+        breq=jnp.asarray(np.stack([bq for _, bq in padded])),
+        src=jnp.asarray([d.src for d in dfs], jnp.int32),
+        dst=jnp.asarray([d.dst for d in dfs], jnp.int32),
+        p_eff=jnp.asarray([d.p for d in dfs], jnp.int32),
+    )
+    return tensors, p_max
+
+
+BATCH_IN_AXES = {
+    "cap": None, "bw": None, "lat": None,
+    "prefix": 0, "breq": 0, "src": 0, "dst": 0, "p_eff": 0,
+}

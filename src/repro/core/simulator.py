@@ -34,6 +34,7 @@ from typing import Optional
 import numpy as np
 
 from .graph import DataflowPath, Mapping, ResourceGraph
+from .problem import EPS_BW, EPS_COST, make_cap_ok
 
 
 @dataclasses.dataclass
@@ -64,10 +65,7 @@ def simulate(
     src, dst = df.src, df.dst
     rng = np.random.default_rng(cfg.seed)
     stats = SimStats()
-    creq_prefix = np.concatenate([[0.0], np.cumsum(df.creq)])
-
-    def cap_ok(j: int, k: int, v: int) -> bool:  # place nodes j..k-1 on v
-        return creq_prefix[k] - creq_prefix[j] <= float(rg.cap[v]) + 1e-9
+    cap_ok = make_cap_ok(rg, df)  # place nodes j..k-1 on v
 
     neighbors = {u: rg.neighbors(u) for u in range(n)}
 
@@ -98,7 +96,7 @@ def simulate(
             seen[u].add(key)
             stored[u] += 1
             return True
-        if cost < best_cost[u][j] - 1e-12:
+        if cost < best_cost[u][j] - EPS_COST:
             best_cost[u][j] = cost
             stored[u] += 1
             return True
@@ -135,7 +133,7 @@ def simulate(
                 v
                 for v in neighbors[u]
                 if v not in route
-                and float(rg.bw[u, v]) + 1e-9 >= float(df.breq[k - 1])
+                and float(rg.bw[u, v]) + EPS_BW >= float(df.breq[k - 1])
             ]
             if cfg.policy == "random_k" and len(outs) > cfg.k:
                 outs = [int(v) for v in rng.choice(outs, size=cfg.k, replace=False)]

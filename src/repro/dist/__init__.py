@@ -1,0 +1,1 @@
+"""Distribution utilities: logical-axis sharding rules (MaxText/t5x style)."""

@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules (MaxText/t5x style).
+
+Model ``init_*`` functions return ``(params, axes)`` where ``axes`` mirrors
+the param pytree with tuples of *logical axis names* per dimension (see
+``repro.models.common``).  A :class:`Rules` object maps logical names onto
+mesh axes and turns (logical axes, concrete shape) into a
+``NamedSharding`` — dropping any assignment whose mesh-axis product does not
+divide the dimension and never using one mesh axis twice in a spec, so every
+emitted sharding is valid for any mesh/shape combination.
+
+Rule sets:
+
+- ``train_compute_rules``  — tensor parallel over ``model``; batch over the
+  data axes (``("pod", "data")`` on the multi-pod mesh).
+- ``train_seqpar_rules``   — like compute, but activations shard the
+  *sequence* dimension over ``model`` (§Perf B3).
+- ``train_state_rules``    — ZeRO-style: master/optimizer state additionally
+  sharded over the data axes on the ``d_model`` dimension.
+- ``serve_rules``          — decode/prefill: KV-cache batch over data axes,
+  heads over ``model``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: F401
+
+AxisSpec = Union[str, tuple, None]
+
+
+def _mesh_axis_size(mesh: Mesh, axes: AxisSpec) -> int:
+    """Product of mesh-axis sizes a logical axis maps onto (1 for None)."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes if a in mesh.shape] or [1]))
+
+
+def _batch_axes(mesh: Mesh) -> AxisSpec:
+    """Every non-model mesh axis carries batch (pod x data on multi-pod)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+@dataclasses.dataclass
+class Rules:
+    """Logical-axis -> mesh-axis mapping plus the spec/sharding builders."""
+
+    mesh: Mesh
+    rules: dict  # logical axis name -> mesh axis | tuple of mesh axes | None
+
+    def spec(self, logical: tuple, shape: tuple) -> P:
+        """PartitionSpec for one array: per-dim lookup with validity checks
+        (divisibility; each mesh axis used at most once)."""
+        used: set = set()
+        out = []
+        for name, dim in zip(logical, shape):
+            mx = self.rules.get(name) if name is not None else None
+            if mx is None:
+                out.append(None)
+                continue
+            axes = (mx,) if isinstance(mx, str) else tuple(mx)
+            axes = tuple(a for a in axes if a in self.mesh.shape and a not in used)
+            size = _mesh_axis_size(self.mesh, axes)
+            if not axes or size <= 1 or int(dim) % size != 0:
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else axes)
+        while out and out[-1] is None:  # canonical short spec
+            out.pop()
+        return P(*out)
+
+    def sharding(self, logical: tuple, shape: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+def _model_sharded(mesh: Mesh, *, batch: AxisSpec, seq: AxisSpec = None,
+                   extra: Optional[dict] = None) -> Rules:
+    rules = {
+        "batch": batch,
+        "seq": seq,
+        # weights: shard the "wide" dimension of each layer over model
+        "d_ff": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_ff": "model",
+        "d_inner": "model",
+        "heads_ssm": "model",
+        # replicated by default
+        "d_model": None,
+        "ssm_state": None,
+        "ssm_proj": None,
+        "dt_rank": None,
+        "conv": None,
+        "moe_dense": None,
+        # KV-cache axes (serving)
+        "cache_batch": batch,
+        "cache_seq": None,
+        "cache_kv_heads": "model",
+        "cache_hd": None,
+    }
+    rules.update(extra or {})
+    return Rules(mesh, rules)
+
+
+def train_compute_rules(mesh: Mesh) -> Rules:
+    """bf16 compute params: tensor parallel over ``model``, batch over data."""
+    return _model_sharded(mesh, batch=_batch_axes(mesh))
+
+
+def train_seqpar_rules(mesh: Mesh) -> Rules:
+    """Sequence parallelism (§Perf B3): activations shard seq over ``model``;
+    weight layout matches the TP rules (the math is identical)."""
+    return _model_sharded(mesh, batch=_batch_axes(mesh), seq="model")
+
+
+def train_state_rules(mesh: Mesh) -> Rules:
+    """fp32 master params + optimizer moments (and ZeRO-3 compute params):
+    additionally sharded over the data axes on ``d_model`` so state memory
+    scales down with the full device count, not just the model axis."""
+    return _model_sharded(mesh, batch=_batch_axes(mesh),
+                          extra={"d_model": _batch_axes(mesh)})
+
+
+def serve_rules(mesh: Mesh, *, batch: int, kv_heads: int, seq: int) -> Rules:
+    """Decode/prefill: slot-batch over the data axes, heads over ``model``.
+    The (batch, kv_heads, seq) hints keep the signature explicit at call
+    sites; actual divisibility is re-checked per-array in ``Rules.spec``."""
+    del batch, kv_heads, seq
+    return _model_sharded(mesh, batch=_batch_axes(mesh))
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+
+
+def tree_shardings(rules: Rules, shapes: Any, axes: Any) -> Any:
+    """Map a (params-shaped) tree of logical-axes tuples + a matching tree of
+    arrays/ShapeDtypeStructs to a tree of NamedShardings."""
+    return jax.tree.map(
+        lambda a, s: rules.sharding(a, tuple(s.shape)),
+        axes, shapes, is_leaf=_is_axes_leaf,
+    )
+
+
+def batch_shardings(rules: Rules, specs: dict) -> dict:
+    """Input-batch shardings: dim 0 is the global batch, dim 1 (when present)
+    the sequence; trailing dims (e.g. patch embedding width) replicate."""
+    out = {}
+    for k, v in specs.items():
+        logical = ("batch",) + (("seq",) if v.ndim > 1 else ())
+        logical = logical + (None,) * (v.ndim - len(logical))
+        out[k] = rules.sharding(logical, tuple(v.shape))
+    return out

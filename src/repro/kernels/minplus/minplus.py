@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core.problem import BIG
+
 try:  # TPU compiler params (ignored in interpret mode)
     from jax.experimental.pallas import tpu as pltpu
 
@@ -33,8 +35,6 @@ try:  # TPU compiler params (ignored in interpret mode)
     )
 except Exception:  # pragma: no cover
     _COMPILER_PARAMS = None
-
-BIG = np.float32(1e18)
 
 # Default tile sizes (hillclimbed in EXPERIMENTS.md §Perf; see ops.py).
 V_TILE = 128  # reduction tile (v)

@@ -12,9 +12,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-BIG = np.float32(1e18)
+from repro.core.problem import BIG
 
 
 def masked_minplus_ref(P, lat, bw, breq_k):

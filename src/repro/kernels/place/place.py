@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-BIG = np.float32(1e18)
+from repro.core.problem import BIG, EPS_CAP_F32
 
 V_TILE = 128
 K_OUT_TILE = 8
@@ -44,7 +44,7 @@ def _kernel(prefix_ref, prefix_out_ref, c_ref, cap_ref, p_ref, pj_ref):
     j_idx = jax.lax.broadcasted_iota(jnp.int32, (1, KO, K), 2)
     k_idx = k_blk * KO + jax.lax.broadcasted_iota(jnp.int32, (1, KO, K), 1)
     block = prefix_out[None, :, None] - prefix[None, None, :]  # (1, KO, K)
-    feas = (j_idx <= k_idx) & (block <= cap[:, :, None] + 1e-6)  # (V, KO, K)
+    feas = (j_idx <= k_idx) & (block <= cap[:, :, None] + EPS_CAP_F32)  # (V, KO, K)
     cand = jnp.where(feas, C[:, None, :], BIG)
     p_ref[...] = jnp.min(cand, axis=2)
     pj_ref[...] = jnp.argmin(cand, axis=2).astype(jnp.int32)

@@ -10,9 +10,8 @@ compute capacity (prefix = cumulative creq).  Infeasible = BIG.
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
-BIG = np.float32(1e18)
+from repro.core.problem import BIG, EPS_CAP_F32
 
 
 def place_window_ref(C, cap, prefix):
@@ -22,7 +21,7 @@ def place_window_ref(C, cap, prefix):
     k = jnp.arange(K)
     block = prefix[None, :, None] - prefix[None, None, :]  # [1, k, j]
     feas = (j[None, None, :] <= k[None, :, None]) & (
-        block <= cap[:, None, None] + 1e-6
+        block <= cap[:, None, None] + EPS_CAP_F32
     )  # [v, k, j]
     cand = jnp.where(feas, C[:, None, :], BIG)
     return jnp.min(cand, axis=2), jnp.argmin(cand, axis=2).astype(jnp.int32)

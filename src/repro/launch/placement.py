@@ -27,8 +27,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import engine
 from repro.core.graph import DataflowPath, Mapping, ResourceGraph
-from repro.core.leastcost import leastcost_jax, leastcost_python
 from repro.models.config import ModelConfig, ShapeConfig
 
 # v5e constants (also used by the roofline; see benchmarks/roofline.py)
@@ -131,9 +131,13 @@ def plan_pipeline(
     src_slice: int = 0,
     dst_slice: Optional[int] = None,
     use_jax: bool = True,
+    method: Optional[str] = None,
 ) -> Optional[PlacementPlan]:
     """Place the model's pipeline stages onto pod slices via BCPM.
 
+    Solved through the unified mapper engine (``repro.core.engine.solve``);
+    ``method`` picks any registered backend, defaulting to the tensorized
+    DP (``use_jax=False`` keeps the legacy path-carrying alias).
     train: backward ~ 2x forward -> 3x forward FLOPs per step.
     """
     tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
@@ -154,8 +158,8 @@ def plan_pipeline(
         src=src_slice,
         dst=dst,
     )
-    solver = leastcost_jax if use_jax else leastcost_python
-    mapping, _stats = solver(rg, df)
+    method = method or ("leastcost_jax" if use_jax else "leastcost_python")
+    mapping, _stats = engine.solve(rg, df, method=method)
     if mapping is None:
         return None
     stage_slices = list(mapping.assign[1:-1])

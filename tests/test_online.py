@@ -1,0 +1,147 @@
+"""Online multi-request placement service: admission, residual-capacity
+invariants, micro-batched solving, and churn re-mapping."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DataflowPath,
+    OnlinePlacer,
+    ResourceGraph,
+    random_dataflow,
+    validate_mapping,
+    waxman,
+)
+
+
+def _light_requests(rg, k, p=5, seed0=500):
+    return [
+        random_dataflow(rg, p, seed=seed0 + i,
+                        creq_range=(0.02, 0.1), breq_range=(0.5, 3.0))
+        for i in range(k)
+    ]
+
+
+def test_admit_release_roundtrip():
+    rg = waxman(16, seed=2)
+    placer = OnlinePlacer(rg)
+    df = _light_requests(rg, 1)[0]
+    t = placer.admit(df)
+    assert t is not None
+    ok, why = validate_mapping(rg, df, t.mapping)
+    assert ok, why
+    assert np.sum(placer.cap) < np.sum(rg.cap)  # capacity committed
+    placer.check_invariants()
+    placer.release(t)
+    np.testing.assert_allclose(placer.cap, rg.cap.astype(np.float64))
+    np.testing.assert_allclose(placer.bw, rg.bw.astype(np.float64))
+    placer.check_invariants()
+
+
+def test_admit_many_64_concurrent_with_invariants():
+    """The acceptance-criteria scenario: >= 64 concurrent requests admitted
+    against residual capacity, invariants intact throughout."""
+    rg = waxman(24, seed=7)
+    placer = OnlinePlacer(rg)
+    dfs = _light_requests(rg, 80)
+    tickets = []
+    for i in range(0, len(dfs), 32):
+        tickets.extend(placer.admit_many(dfs[i:i + 32]))
+        placer.check_invariants()
+    admitted = [t for t in tickets if t is not None]
+    assert len(admitted) >= 64, len(admitted)
+    # every committed mapping was feasible on the network it was granted
+    assert placer.stats.admitted == len(admitted)
+    # aggregate commitments really left the residual
+    total_creq = sum(float(np.sum(t.df.creq)) for t in admitted)
+    assert np.sum(rg.cap) - np.sum(placer.cap) == pytest.approx(total_creq, rel=1e-6)
+
+
+def test_admission_rejects_when_capacity_exhausted():
+    # tiny network, big requests: the second identical request can't fit
+    rg = ResourceGraph.from_edge_list(
+        [0.0, 2.0, 0.0], [(0, 1, 50.0, 1.0), (1, 2, 50.0, 1.0)]
+    )
+    df = DataflowPath.make([0.0, 2.0, 0.0], [5.0, 5.0], src=0, dst=2)
+    placer = OnlinePlacer(rg)
+    assert placer.admit(df) is not None
+    assert placer.admit(df) is None  # node 1 has no residual capacity left
+    assert placer.stats.rejected == 1
+    placer.check_invariants()
+
+
+def test_bandwidth_is_committed_too():
+    rg = ResourceGraph.from_edge_list(
+        [0.0, 5.0, 0.0], [(0, 1, 10.0, 1.0), (1, 2, 10.0, 1.0)]
+    )
+    df = DataflowPath.make([0.0, 1.0, 0.0], [8.0, 8.0], src=0, dst=2)
+    placer = OnlinePlacer(rg)
+    assert placer.admit(df) is not None
+    # links now hold 2 GB/s residual < 8 required -> reject
+    assert placer.admit(df) is None
+    placer.check_invariants()
+
+
+def test_batched_admission_matches_sequential_costs():
+    rg = waxman(20, seed=11)
+    dfs = _light_requests(rg, 12, seed0=900)
+    seq = OnlinePlacer(rg)
+    bat = OnlinePlacer(rg)
+    t_seq = [seq.admit(d) for d in dfs]
+    t_bat = bat.admit_many(dfs)
+    for a, b in zip(t_seq, t_bat):
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert abs(a.mapping.cost - b.mapping.cost) < 1e-3
+    seq.check_invariants()
+    bat.check_invariants()
+
+
+def test_node_churn_remaps_displaced():
+    rg = waxman(24, seed=3)
+    placer = OnlinePlacer(rg)
+    tickets = [t for t in placer.admit_many(_light_requests(rg, 24)) if t]
+    assert tickets
+    # fail the most-used intermediate node
+    counts = {}
+    for t in tickets:
+        for v in t.mapping.route:
+            if v not in (t.df.src, t.df.dst):
+                counts[v] = counts.get(v, 0) + 1
+    assert counts, "no intermediate nodes used; instance too easy"
+    victim = max(counts, key=counts.get)
+    displaced_before = counts[victim]
+    remapped, dropped = placer.fail_node(victim)
+    assert len(remapped) + len(dropped) >= displaced_before
+    placer.check_invariants()
+    # no surviving placement routes through the failed node
+    for t in placer.tickets.values():
+        assert victim not in t.mapping.route
+    # re-admitted mappings are valid on the degraded network
+    degraded = placer.residual_graph()
+    assert degraded.cap[victim] == 0.0
+    for t in remapped:
+        assert victim not in t.mapping.route
+
+
+def test_link_churn_remaps_displaced():
+    rg = waxman(20, seed=9)
+    placer = OnlinePlacer(rg)
+    tickets = [t for t in placer.admit_many(_light_requests(rg, 16, seed0=700)) if t]
+    multi_hop = [t for t in tickets if len(t.mapping.route) > 1]
+    assert multi_hop
+    u, v = next(iter(multi_hop[0].edge_load))
+    placer.fail_link(u, v)
+    placer.check_invariants()
+    for t in placer.tickets.values():
+        assert (u, v) not in t.edge_load and (v, u) not in t.edge_load
+
+
+def test_src_down_rejects():
+    rg = waxman(16, seed=6)
+    placer = OnlinePlacer(rg)
+    df = _light_requests(rg, 1, seed0=42)[0]
+    placer.fail_node(df.src)
+    assert placer.admit(df) is None
+    placer.restore_node(df.src)
+    assert placer.admit(df) is not None
+    placer.check_invariants()
