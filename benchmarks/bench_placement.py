@@ -3,24 +3,37 @@
 1. BCPM planning for every assigned architecture on the 2-pod slice graph
    (quality = end-to-end route latency; time = solver wall clock, warm jit).
 2. Online multi-request placement service (``core.online.OnlinePlacer``):
-   micro-batched vmapped-DP throughput vs a sequential ``solve()`` loop on
-   the same request stream, plus an admission + churn exercise with
-   residual-capacity invariants checked.
+   batched-kernel vs vmapped-jnp vs sequential ``solve()`` on the same
+   request stream, plus a speedup curve over batch size and network size
+   and an admission + churn exercise with residual-capacity invariants.
+3. Streaming admission under a Poisson arrival/departure process with
+   periodic node churn (the paper's dynamic scenario, quantified):
+   steady-state admission rate and re-map latency.
 
 ``python -m benchmarks.bench_placement [--smoke]`` writes the online-service
-numbers to ``BENCH_placement.json`` (the CI smoke artifact).
+numbers to ``BENCH_placement.json`` and the churn process numbers to
+``BENCH_streaming.json`` (both CI artifacts).
+
+Off-TPU the ``use_kernel=True`` path runs the fused batched jnp mirror of
+the Pallas superstep kernel (``kernels/minplus/batched``) — same math, same
+shared-network batching, no per-request vmap graph.  On TPU the Pallas
+kernel replaces it; its expected advantage is the HBM-traffic model in the
+kernel's module docstring (O(n^2 + B*n*K) vs O(B*n^2*K) per superstep).
 """
 from __future__ import annotations
 
+import heapq
 import json
 import time
 
+import numpy as np
+
 from repro.core import OnlinePlacer, random_dataflow, solve, solve_batch, waxman
-from repro.launch.placement import PodTopology, plan_pipeline
 
 
 def run_archs():
     from repro.configs import ARCHS, get_config
+    from repro.launch.placement import PodTopology, plan_pipeline
     from repro.models.config import SHAPES
 
     rows = []
@@ -53,35 +66,105 @@ def _request_stream(rg, n_requests: int, p: int, seed0: int):
     ]
 
 
+def _best_time(fn, reps: int = 7) -> float:
+    """min-of-reps wall clock: the robust statistic on noisy shared runners
+    (the true cost is the floor; everything above it is interference)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_batch_curve(*, n_list=(16, 32), batch_list=(1, 8, 32, 64), p: int = 6,
+                    seed: int = 3, reps: int = 20):
+    """Speedup curve over batch size and network size: batched-kernel DP vs
+    vmapped-jnp DP vs a sequential solve loop on one shared network.
+
+    The DP is timed directly (jit + block_until_ready): parent-pointer
+    reconstruction is identical python work on both batched paths and would
+    only add noise to the comparison the kernel changes.
+    """
+    import jax
+
+    from repro.core.leastcost import _leastcost_dp_batched, _vmapped_dp
+    from repro.core.problem import stack_requests
+
+    curve = []
+    for n in n_list:
+        rg = waxman(n, seed=seed)
+        dfs_all = _request_stream(rg, max(batch_list), p, seed0=2000)
+        solve(rg, dfs_all[0], method="leastcost_jax")  # warm single shape
+        for b in batch_list:
+            dfs = dfs_all[:b]
+            tensors, p_max = stack_requests(rg, dfs)
+            vmapped = _vmapped_dp(n, p_max, n - 1)  # same cached jit as prod
+            f_v = lambda: jax.block_until_ready(vmapped(tensors)[0])  # noqa: E731
+            f_k = lambda: jax.block_until_ready(  # noqa: E731
+                _leastcost_dp_batched(tensors, B=b, n=n, p=p_max,
+                                      max_rounds=n - 1, impl="ref")[0])
+            f_v(), f_k()  # warm both compiled paths
+            # each path is measured in steady state (warm, back-to-back,
+            # min-of-reps): alternating executables every call adds
+            # allocator/cache churn that swamps the ~10% DP difference
+            t_vmap = _best_time(f_v, reps)
+            t_kern = _best_time(f_k, reps)
+            t_seq = _best_time(
+                lambda: [solve(rg, df, method="leastcost_jax") for df in dfs],
+                max(2, reps - 4))
+            curve.append({
+                "n": n, "batch": b, "kernel_impl": "ref",
+                "sequential_solve_s": t_seq, "vmapped_dp_s": t_vmap,
+                "kernel_dp_s": t_kern,
+                "kernel_vs_vmapped": t_vmap / max(t_kern, 1e-9),
+            })
+    return curve
+
+
 def run_online(*, n: int = 24, p: int = 6, n_requests: int = 128,
                micro_batch: int = 64, seed: int = 7,
+               curve_kwargs: dict | None = None,
                out_path: str = "BENCH_placement.json"):
     rg = waxman(n, seed=seed)
     dfs = _request_stream(rg, n_requests, p, seed0=1000)
 
-    # warm both jit paths (single-request and batched shapes)
+    # DP speedup curve first: measured in a quiet process, before the
+    # service exercise below fills the jit cache and allocator
+    curve = run_batch_curve(**(curve_kwargs or {}))
+
+    # warm all jit paths (single-request, batched, batched-kernel shapes)
     solve(rg, dfs[0], method="leastcost_jax")
     solve_batch(rg, dfs[:micro_batch], method="leastcost_jax")
+    solve_batch(rg, dfs[:micro_batch], method="leastcost_jax", use_kernel=True)
 
-    t0 = time.perf_counter()
     seq = [solve(rg, df, method="leastcost_jax")[0] for df in dfs]
-    t_seq = time.perf_counter() - t0
+    t_seq = _best_time(
+        lambda: [solve(rg, df, method="leastcost_jax") for df in dfs], reps=3)
 
-    t0 = time.perf_counter()
-    bat = []
-    for i in range(0, n_requests, micro_batch):
-        ms, _ = solve_batch(rg, dfs[i:i + micro_batch], method="leastcost_jax")
-        bat.extend(ms)
-    t_bat = time.perf_counter() - t0
+    def run_batched(**kw):
+        out = []
+        for i in range(0, n_requests, micro_batch):
+            ms, _ = solve_batch(rg, dfs[i:i + micro_batch],
+                                method="leastcost_jax", **kw)
+            out.extend(ms)
+        return out
 
-    agree = sum(
-        (a is None) == (b is None)
-        and (a is None or abs(a.cost - b.cost) < 1e-3)
-        for a, b in zip(seq, bat)
-    )
+    bat = run_batched()
+    t_bat = _best_time(run_batched, reps=3)
 
-    # admission + churn against residual capacity
-    placer = OnlinePlacer(rg)
+    ker = run_batched(use_kernel=True)
+    t_ker = _best_time(lambda: run_batched(use_kernel=True), reps=3)
+
+    def _agree(a_list, b_list):
+        return sum(
+            (a is None) == (b is None)
+            and (a is None or abs(a.cost - b.cost) < 1e-3)
+            for a, b in zip(a_list, b_list)
+        ) / n_requests
+
+    # admission + churn against residual capacity (kernel path)
+    placer = OnlinePlacer(rg, use_kernel=True)
     tickets = []
     for i in range(0, n_requests, micro_batch):
         tickets.extend(placer.admit_many(dfs[i:i + micro_batch]))
@@ -98,9 +181,12 @@ def run_online(*, n: int = 24, p: int = 6, n_requests: int = 128,
 
     record = {
         "n": n, "p": p, "n_requests": n_requests, "micro_batch": micro_batch,
-        "sequential_s": t_seq, "batched_s": t_bat,
+        "sequential_s": t_seq, "batched_s": t_bat, "kernel_s": t_ker,
         "speedup": t_seq / max(t_bat, 1e-9),
-        "agreement": agree / n_requests,
+        "speedup_kernel": t_seq / max(t_ker, 1e-9),
+        "kernel_vs_vmapped": t_bat / max(t_ker, 1e-9),
+        "agreement": _agree(seq, bat),
+        "agreement_kernel": _agree(seq, ker),
         "admitted": admitted_stream,
         "admitted_total": placer.stats.admitted,  # incl. churn re-admissions
         "rejected": placer.stats.rejected,
@@ -111,6 +197,139 @@ def run_online(*, n: int = 24, p: int = 6, n_requests: int = 128,
             "remapped": len(remapped),
             "dropped": len(dropped),
         },
+        "invariants_ok": True,
+        "curve": curve,
+        "tpu_note": (
+            "off-TPU use_kernel runs the fused-jnp mirror of the batched "
+            "Pallas superstep, which XLA compiles to nearly the same code "
+            "as the jitted vmap — kernel_vs_vmapped ~1.0 +/- runner noise "
+            "is the expected CPU reading.  The kernel's claimed advantage "
+            "is the TPU HBM-traffic model (O(n^2 + B*n*K) vs O(B*n^2*K) "
+            "per superstep, lat/bw tiles shared across the batch; see "
+            "kernels/minplus/batched.py) which a CPU proxy cannot exhibit."
+        ),
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
+                  hold: float = 2.0, horizon: float = 10.0, tick: float = 0.25,
+                  fail_every: float = 2.5, seed: int = 11,
+                  use_kernel: bool = True,
+                  out_path: str = "BENCH_streaming.json"):
+    """Poisson arrival/departure process against one shared network.
+
+    Requests arrive at ``rate``/unit-time, hold capacity for Exp(``hold``)
+    and depart; every ``fail_every`` units a busy node fails (displacing its
+    tickets through re-admission) and the previously failed node restores.
+    Virtual time drives the process; wall clock is measured only around the
+    micro-batched admissions and the churn re-maps.
+    """
+    rng = np.random.default_rng(seed)
+    rg = waxman(n, seed=seed)
+    placer = OnlinePlacer(rg, use_kernel=use_kernel)
+
+    # Warm the jit specializations the event loop will hit (power-of-two DP
+    # buckets + the single-request re-solve shape), so admit/remap latencies
+    # measure steady-state solves, not first-call compiles.
+    warm_df = _request_stream(rg, 1, p, seed0=1)[0]
+    solve(rg, warm_df, method="leastcost_jax", use_kernel=use_kernel)
+    warm_max = 1 << max(1, int(np.ceil(np.log2(max(4 * rate * tick, 2)))))
+    b = 1
+    while b <= warm_max:
+        solve_batch(rg, [warm_df] * b, method="leastcost_jax",
+                    use_kernel=use_kernel, bucket_batch=True)
+        b *= 2
+
+    # Poisson arrivals over the horizon
+    arrivals, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= horizon:
+            break
+        arrivals.append(t)
+    reqs = _request_stream(rg, len(arrivals), p, seed0=int(seed) * 131)
+
+    departures: list[tuple[float, int]] = []  # heap of (t_depart, tid)
+    admit_ms: list[float] = []
+    remap_ms: list[float] = []
+    displaced_total = remapped_total = 0
+    offered = admitted_arrivals = 0  # arrival stream only (churn re-
+    # admissions are tracked separately via placer.stats)
+    occupancy: list[int] = []
+    failed_node: int | None = None
+    next_fail = fail_every
+    i = 0
+    now = 0.0
+    while now < horizon:
+        now = min(now + tick, horizon)
+        # departures due by `now`
+        while departures and departures[0][0] <= now:
+            _, tid = heapq.heappop(departures)
+            if tid in placer.tickets:
+                placer.release(tid)
+        # churn: restore the previous casualty, fail the busiest node
+        if now >= next_fail:
+            next_fail += fail_every
+            if failed_node is not None:
+                placer.restore_node(failed_node)
+            load = np.zeros(n)
+            for tk in placer.tickets.values():
+                for v in tk.mapping.route:
+                    if v not in (tk.df.src, tk.df.dst):
+                        load[v] += 1
+            if load.max() > 0:
+                failed_node = int(load.argmax())
+                t0 = time.perf_counter()
+                rem, drop = placer.fail_node(failed_node)
+                remap_ms.append(1e3 * (time.perf_counter() - t0))
+                displaced_total += len(rem) + len(drop)
+                remapped_total += len(rem)
+                for tk in rem:
+                    heapq.heappush(
+                        departures, (now + rng.exponential(hold), tk.tid))
+        # micro-batch the tick's arrivals
+        batch = []
+        while i < len(arrivals) and arrivals[i] <= now:
+            batch.append(reqs[i])
+            i += 1
+        if batch:
+            offered += len(batch)
+            t0 = time.perf_counter()
+            tickets = placer.admit_many(batch)
+            admit_ms.append(1e3 * (time.perf_counter() - t0))
+            for tk in tickets:
+                if tk is not None:
+                    admitted_arrivals += 1
+                    heapq.heappush(
+                        departures, (now + rng.exponential(hold), tk.tid))
+        occupancy.append(len(placer.tickets))
+    placer.check_invariants()
+
+    st = placer.stats
+    record = {
+        "n": n, "p": p, "rate": rate, "hold": hold, "horizon": horizon,
+        "tick": tick, "fail_every": fail_every, "use_kernel": use_kernel,
+        "warmed_buckets_to": warm_max,  # larger churn batches may compile
+        "offered": offered,
+        "admitted": admitted_arrivals,  # arrival stream only
+        "admitted_total": st.admitted,  # incl. churn re-admissions
+        "rejected_total": st.rejected,
+        "admission_rate": admitted_arrivals / max(offered, 1),
+        "steady_state_occupancy": float(np.mean(occupancy)) if occupancy else 0,
+        "batches": st.batches,
+        "batch_conflicts": st.batch_conflicts,
+        "admit_ms_mean": float(np.mean(admit_ms)) if admit_ms else 0.0,
+        "admit_ms_p95": float(np.percentile(admit_ms, 95)) if admit_ms else 0.0,
+        "churn_events": len(remap_ms),
+        "displaced": displaced_total,
+        "remapped": remapped_total,
+        "dropped": st.dropped,
+        "remap_ms_mean": float(np.mean(remap_ms)) if remap_ms else 0.0,
+        "remap_ms_p95": float(np.percentile(remap_ms, 95)) if remap_ms else 0.0,
+        "solve_ms_total": st.solve_ms,
         "invariants_ok": True,
     }
     with open(out_path, "w") as f:
@@ -126,10 +345,22 @@ def run():
         "us_per_call": 1e6 * rec["batched_s"] / rec["n_requests"],
         "derived": (
             f"speedup_batched={rec['speedup']:.1f}x;"
+            f"speedup_kernel={rec['speedup_kernel']:.1f}x;"
             f"admitted={rec['admitted']}/{rec['n_requests']};"
             f"agreement={rec['agreement']:.2f};"
             f"churn_remapped={rec['churn']['remapped']}/"
             f"{rec['churn']['displaced']}"
+        ),
+    })
+    srec = run_streaming()
+    rows.append({
+        "name": "placement_streaming_poisson",
+        "us_per_call": 1e3 * srec["admit_ms_mean"],
+        "derived": (
+            f"admission_rate={srec['admission_rate']:.2f};"
+            f"occupancy={srec['steady_state_occupancy']:.1f};"
+            f"remap_ms_p95={srec['remap_ms_p95']:.1f};"
+            f"dropped={srec['dropped']}"
         ),
     })
     return rows
@@ -140,10 +371,16 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="online service only, small sizes (CI artifact)")
+                    help="online + streaming only, small sizes (CI artifact)")
     args = ap.parse_args()
     if args.smoke:
-        rec = run_online(n=24, n_requests=64, micro_batch=64)
+        rec = run_online(
+            n=24, n_requests=64, micro_batch=64,
+            curve_kwargs=dict(n_list=(16, 24), batch_list=(1, 8, 32),
+                              reps=20),
+        )
+        srec = run_streaming(n=20, rate=16.0, horizon=6.0)
     else:
         rec = run_online()
-    print(json.dumps(rec, indent=2))
+        srec = run_streaming()
+    print(json.dumps({"online": rec, "streaming": srec}, indent=2))

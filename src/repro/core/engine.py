@@ -21,7 +21,8 @@ Registered methods:
   ``leastcost_python``  faithful path-carrying LeastCostMap (§3.4.1)
   ``anneal``            AnnealedLeastCostMap (§3.4.2)
   ``random_k``          RandomNeighbor (§3.4.3)
-  ``leastcost_jax``     tensorized (min,+) DP (TPU path via ``use_kernel``)
+  ``leastcost_jax``     tensorized (min,+) DP; ``use_kernel=True`` runs the
+                        fused batched Pallas superstep (minplus/batched)
   ``shard_map``         decentralized BSP engine on a JAX device mesh
 
 New backends register with :func:`register`; ``solve`` stays the only API.
@@ -53,6 +54,7 @@ class Stats:
     maps_generated: int = 0
     fallback_used: bool = False  # tensorized backends: path-carrying rescue
     validated: bool = True
+    kernel_impl: str = ""  # use_kernel paths: "pallas" | "interpret" | "ref"
     virtual_time: float = 0.0  # simulator virtual completion time
     solve_ms: float = 0.0  # wall clock inside the backend
     batch_size: int = 1
@@ -74,6 +76,7 @@ def _unify(native, method: str) -> Stats:
     s.maps_generated = int(getattr(native, "total_maps_generated", 0))
     s.fallback_used = bool(getattr(native, "fallback_used", False))
     s.validated = bool(getattr(native, "validated", True))
+    s.kernel_impl = str(getattr(native, "kernel_impl", ""))
     s.virtual_time = float(
         getattr(native, "completed_at", None) or getattr(native, "virtual_time", 0.0)
     )
@@ -81,6 +84,12 @@ def _unify(native, method: str) -> Stats:
 
 
 _REGISTRY: dict[str, Callable] = {}
+
+# Backends that natively batch many requests into one solve in solve_batch
+# (everything else falls back to a sequential loop).  Callers that shape
+# their batches around native batching (e.g. OnlinePlacer's power-of-two
+# bucketing) key off this set rather than hardcoding method names.
+BATCHED_METHODS = frozenset({"leastcost_jax"})
 
 
 def register(name: str):
@@ -125,14 +134,17 @@ def solve_batch(
 ) -> tuple[list[Optional[Mapping]], Stats]:
     """Solve many requests against one shared network.
 
-    ``leastcost_jax`` batches into a single vmapped DP (mixed-``p`` requests
-    are padded; see ``core.problem``); every other backend falls back to a
+    ``leastcost_jax`` batches into a single batched DP (mixed-``p`` requests
+    are padded; see ``core.problem``); with ``use_kernel=True`` in ``cfg``
+    the fused batched Pallas superstep of ``repro.kernels.minplus.batched``
+    replaces the vmapped per-request graph (``Stats.kernel_impl`` records
+    which implementation ran).  Every other backend falls back to a
     sequential loop through :func:`solve`.
     """
     if not dfs:
         return [], Stats(method=method, batch_size=0)
     t0 = time.perf_counter()
-    if method == "leastcost_jax":
+    if method in BATCHED_METHODS:
         from .leastcost import leastcost_jax_batched
 
         stats = Stats(method=method)
@@ -147,6 +159,7 @@ def solve_batch(
             stats.rounds = max(stats.rounds, st.rounds)
             stats.max_set_size = max(stats.max_set_size, st.max_set_size)
             stats.fallback_used |= st.fallback_used
+            stats.validated &= st.validated
     stats.batch_size = len(dfs)
     stats.solve_ms = 1e3 * (time.perf_counter() - t0)
     return mappings, stats

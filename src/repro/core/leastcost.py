@@ -13,15 +13,20 @@
        place:  P[v,k]  = min_{j<=k, s[k]-s[j] <= cap[v]}  C[v,j]
        move:   C'[w,k] = min_{v != w, bw[v,w] >= breq[k-1]}  P[v,k] + lat[v,w]
 
-   iterated to fixpoint (<= n-1 supersteps, Lemma 3.2).  The move step is the
-   bandwidth-masked min-plus matmul implemented as a Pallas TPU kernel in
-   ``repro.kernels.minplus`` (the jnp path here is the oracle / CPU path).
-   Parent pointers are tracked for reconstruction; anomaly handling (broken
-   chain / revisit) lives in ``core.reconstruct``.
+   iterated to fixpoint (<= n-1 supersteps, Lemma 3.2).  On the kernel path
+   (``use_kernel=True``) the whole superstep runs as the fused batched
+   Pallas kernel of ``repro.kernels.minplus.batched`` — the single-step
+   kernels in ``kernels/minplus``/``kernels/place`` remain as step-level
+   oracles only.  Parent pointers are tracked for reconstruction; anomaly
+   handling (broken chain / revisit) lives in ``core.reconstruct``.
 
 Shared constants/tensors come from ``core.problem``; ``leastcost_jax_batched``
-solves many (possibly mixed-``p``) requests on one shared network in a single
-vmapped DP — the continuous-arrival path behind ``core.online.OnlinePlacer``.
+solves many (possibly mixed-``p``) requests on one shared network in one
+batched DP — the continuous-arrival path behind ``core.online.OnlinePlacer``.
+With ``use_kernel=True`` the whole superstep (place + move + monotone update)
+runs as the fused batched Pallas kernel of ``repro.kernels.minplus.batched``
+(grid over (batch, w, k, v) with network tiles shared across the batch);
+off-TPU the kernel's fused-jnp mirror replaces the vmapped per-request graph.
 """
 from __future__ import annotations
 
@@ -62,6 +67,14 @@ class HeuristicStats:
     rounds: int = 0
     fallback_used: bool = False
     validated: bool = True
+    kernel_impl: str = ""  # "", "pallas", "interpret", or "ref"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
 
 
 # ---------------------------------------------------------------------------
@@ -200,11 +213,10 @@ def _move_step_ref(P, lat, bw, breq):
     return Cmv_t.T, pv_t.T
 
 
-def _superstep(state, tensors, move_fn, place_fn=None):
+def _superstep(state, tensors):
     C, par_v, par_j, changed = state
-    place = place_fn or _place_step
-    P, pj = place(C, tensors["cap"], tensors["prefix"])
-    Cmv, pv = move_fn(P, tensors["lat"], tensors["bw"], tensors["breq"])
+    P, pj = _place_step(C, tensors["cap"], tensors["prefix"])
+    Cmv, pv = _move_step_ref(P, tensors["lat"], tensors["bw"], tensors["breq"])
     upd = Cmv < C - EPS_IMPROVE
     Cn = jnp.where(upd, Cmv, C)
     # parent arrival state of (w,k) is (pv[w,k], pj[pv[w,k],k])
@@ -214,22 +226,14 @@ def _superstep(state, tensors, move_fn, place_fn=None):
     return Cn, par_vn, par_jn, jnp.any(upd)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "p", "max_rounds", "use_kernel"))
-def _leastcost_dp(tensors, n: int, p: int, max_rounds: int, use_kernel: bool = False):
-    """Run the relaxation to fixpoint.  ``p`` is the static column count;
-    ``tensors["p_eff"]`` is the (possibly traced, per-request) true dataflow
-    length — the final reduction at ``dst`` only reads columns ``< p_eff``,
-    so padded mixed-``p`` batches share one compiled DP."""
-    if use_kernel:
-        from repro.kernels.minplus import ops as minplus_ops
-        from repro.kernels.place import ops as place_ops
-
-        move_fn = minplus_ops.masked_minplus
-        place_fn = place_ops.place_window
-    else:
-        move_fn = _move_step_ref
-        place_fn = None
-
+@functools.partial(jax.jit, static_argnames=("n", "p", "max_rounds"))
+def _leastcost_dp(tensors, n: int, p: int, max_rounds: int):
+    """Run the relaxation to fixpoint (pure-jnp path).  ``p`` is the static
+    column count; ``tensors["p_eff"]`` is the (possibly traced, per-request)
+    true dataflow length — the final reduction at ``dst`` only reads columns
+    ``< p_eff``, so padded mixed-``p`` batches share one compiled DP.  The
+    kernel path lives in :func:`_leastcost_dp_batched` (``use_kernel=True``
+    routes there, with B=1 for single requests)."""
     C0 = jnp.full((n, p + 1), BIG, jnp.float32)
     # arrival state at src with 0 nodes placed costs 0
     C0 = C0.at[tensors["src"], 0].set(0.0)
@@ -242,8 +246,7 @@ def _leastcost_dp(tensors, n: int, p: int, max_rounds: int, use_kernel: bool = F
 
     def body(carry):
         t, state = carry
-        state = _superstep((state[0], state[1], state[2], state[3]), tensors,
-                           move_fn, place_fn)
+        state = _superstep((state[0], state[1], state[2], state[3]), tensors)
         return t + 1, state
 
     t, (C, par_v, par_j, _) = jax.lax.while_loop(
@@ -260,6 +263,98 @@ def _leastcost_dp(tensors, n: int, p: int, max_rounds: int, use_kernel: bool = F
     return C, par_v, par_j, final[best_j], best_j, t
 
 
+@functools.lru_cache(maxsize=None)
+def _vmapped_dp(n: int, p: int, max_rounds: int):
+    """Cached jit-of-vmap of the per-request DP: without the outer jit the
+    python-level vmap batching trace re-runs on every call, a measurable
+    per-batch overhead on the online placer's hot path."""
+    return jax.jit(
+        jax.vmap(
+            lambda t: _leastcost_dp(t, n=n, p=p, max_rounds=max_rounds),
+            in_axes=(BATCH_IN_AXES,),
+        )
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("B", "n", "p", "max_rounds", "impl", "tiles")
+)
+def _leastcost_dp_batched(tensors, B: int, n: int, p: int, max_rounds: int,
+                          impl: str = "ref", tiles=None):
+    """Run B requests' relaxations to fixpoint with ONE fused batched
+    superstep per round (``repro.kernels.minplus.batched``): the shared
+    ``lat``/``bw`` tiles serve the whole batch instead of being re-streamed
+    per request under vmap.
+
+    ``impl``: "pallas" (TPU), "interpret" (Pallas interpreter — the CPU-CI
+    cross-check path), or "ref" (fused jnp oracle, the fast off-TPU path).
+    All three produce bit-identical results to the vmapped jnp DP.
+    """
+    from repro.kernels.minplus import batched as _batched
+
+    K = p + 1
+    lat, bw, cap = tensors["lat"], tensors["bw"], tensors["cap"]
+    prefix = tensors["prefix"]  # (B, K)
+    # breq_k[b, k] = bandwidth of the dataflow edge carried when k nodes are
+    # placed (edge (k-1, k)); k = 0 and k = p get BIG (no move possible).
+    breq_k = jnp.concatenate(
+        [jnp.full((B, 1), BIG, jnp.float32), tensors["breq"],
+         jnp.full((B, 1), BIG, jnp.float32)], axis=1)
+
+    C0 = jnp.full((B, n, K), BIG, jnp.float32)
+    C0 = C0.at[jnp.arange(B), tensors["src"], 0].set(0.0)
+    pv0 = jnp.full((B, n, K), -1, jnp.int32)
+    pj0 = jnp.full((B, n, K), -1, jnp.int32)
+
+    if impl == "ref":
+        step = functools.partial(
+            _batched.batched_superstep_ref,
+            lat=lat, bw=bw, cap=cap, prefix=prefix, breq_k=breq_k)
+        state0 = (C0, pv0, pj0)
+    else:
+        pads = _batched.pad_batched_problem(
+            lat, bw, cap, prefix, breq_k, tiles=tiles)
+        Bp, K_pad = pads["prefix"].shape
+        n_pad = pads["lat"].shape[0]
+        fill = lambda x, v: jnp.full(  # noqa: E731
+            (Bp, n_pad, K_pad), v, x.dtype).at[:B, :n, :K].set(x)
+        step = functools.partial(
+            _batched.batched_superstep_pallas,
+            lat=pads["lat"], bw=pads["bw"], cap=pads["cap"],
+            prefix=pads["prefix"], breq_k=pads["breq_k"],
+            tiles=tiles, interpret=(impl == "interpret"))
+        state0 = (fill(C0, BIG), fill(pv0, -1), fill(pj0, -1))
+
+    def cond(carry):
+        t, C, pv, pj, changed = carry
+        return (t < max_rounds) & changed
+
+    def body(carry):
+        t, C, pv, pj, _ = carry
+        Cn, pvn, pjn = step(C, pv, pj)
+        # the EPS_IMPROVE update is monotone, so any change is a decrease
+        return t + 1, Cn, pvn, pjn, jnp.any(Cn < C)
+
+    t, Cp, pvp, pjp, _ = jax.lax.while_loop(
+        cond, body, (0, *state0, jnp.array(True))
+    )
+    C, par_v, par_j = Cp[:B, :n, :K], pvp[:B, :n, :K], pjp[:B, :n, :K]
+
+    # answer per request: min over j<p_eff of C[dst, j] + tail placed on dst
+    p_eff = tensors["p_eff"]  # (B,)
+    j_idx = jnp.arange(K)
+    pre_pe = jnp.take_along_axis(prefix, p_eff[:, None], axis=1)  # (B, 1)
+    cap_dst = cap[tensors["dst"]]  # (B,)
+    feas = (j_idx[None, :] < p_eff[:, None]) & (
+        pre_pe - prefix <= cap_dst[:, None] + EPS_CAP_F32
+    )
+    C_dst = C[jnp.arange(B), tensors["dst"], :]  # (B, K)
+    final = jnp.where(feas, C_dst, BIG)
+    best_j = jnp.argmin(final, axis=1)
+    best_cost = jnp.take_along_axis(final, best_j[:, None], axis=1)[:, 0]
+    return C, par_v, par_j, best_cost, best_j, t
+
+
 def leastcost_jax_batched(
     rg: ResourceGraph,
     dfs: list,
@@ -267,6 +362,9 @@ def leastcost_jax_batched(
     validate: bool = True,
     max_rounds: Optional[int] = None,
     use_kernel: bool = False,
+    kernel_impl: Optional[str] = None,
+    tiles=None,
+    bucket_batch: bool = False,
     stats=None,
 ) -> list:
     """Solve many mapping requests on ONE shared resource network in a
@@ -275,20 +373,40 @@ def leastcost_jax_batched(
     cost is one (n, p_max) state tensor.  Requests of mixed ``p`` are padded
     (``core.problem.pad_request``).  Returns a list of (Mapping | None).
 
+    ``use_kernel=True`` selects the fused batched superstep path
+    (``repro.kernels.minplus.batched``) instead of vmapping the per-request
+    DP: the Pallas kernel on TPU, its fused-jnp mirror elsewhere.
+    ``kernel_impl`` overrides the dispatch ("pallas" | "interpret" | "ref");
+    ``tiles`` = (b_tile, v_tile, w_tile, k_tile) for the Pallas grid.
+
+    ``bucket_batch=True`` pads the batch dimension to the next power of two
+    at the TENSOR level (dummy rows, ignored by the reconstruction loop), so
+    a stream of varying micro-batch sizes compiles at most log2(max batch)
+    DP specializations — the online placer's admission path sets this.
+
     ``stats`` (optional, e.g. the engine's unified ``Stats``) aggregates
     anomaly signals across the batch: ``fallback_used`` is set if ANY
     request needed the path-carrying rescue, ``validated`` cleared if ANY
     reconstruction failed validation."""
     assert dfs
     n = rg.n
-    tensors, p_max = stack_requests(rg, dfs)
+    B = len(dfs)
+    if bucket_batch:
+        B = 1 << (B - 1).bit_length()  # next power of two
+    tensors, p_max = stack_requests(rg, dfs, pad_to=B)
     max_rounds = max_rounds or (n - 1 if n > 1 else 1)
-    fn = jax.vmap(
-        lambda t: _leastcost_dp(t, n=n, p=p_max, max_rounds=max_rounds,
-                                use_kernel=use_kernel),
-        in_axes=(BATCH_IN_AXES,),
-    )
-    C, par_v, par_j, best_cost, best_j, _ = fn(tensors)
+    if use_kernel:
+        impl = kernel_impl or ("pallas" if _on_tpu() else "ref")
+        C, par_v, par_j, best_cost, best_j, rounds = _leastcost_dp_batched(
+            tensors, B=B, n=n, p=p_max, max_rounds=max_rounds,
+            impl=impl, tiles=tiles,
+        )
+        if stats is not None:
+            stats.kernel_impl = impl
+            stats.rounds = int(rounds)
+    else:
+        fn = _vmapped_dp(n, p_max, max_rounds)
+        C, par_v, par_j, best_cost, best_j, _ = fn(tensors)
     par_v, par_j = np.asarray(par_v), np.asarray(par_j)
     out = []
     for i, df in enumerate(dfs):
@@ -310,17 +428,37 @@ def leastcost_jax(
     df: DataflowPath,
     *,
     use_kernel: bool = False,
+    kernel_impl: Optional[str] = None,
+    tiles=None,
     max_rounds: Optional[int] = None,
     validate: bool = True,
 ) -> tuple[Optional[Mapping], HeuristicStats]:
-    """Tensorized LeastCostMap.  Returns (mapping | None, stats)."""
+    """Tensorized LeastCostMap.  Returns (mapping | None, stats).
+
+    ``use_kernel=True`` runs the fused batched superstep path with B=1 —
+    the same code path that serves ``leastcost_jax_batched`` (B is a static
+    jit argument, so B=1 compiles its own specialization; the online
+    placer's recompile bound comes from ``admit_many``'s power-of-two
+    batch bucketing).
+    """
     n, p = rg.n, df.p
     stats = HeuristicStats()
-    tensors = problem_tensors(rg, df)
     max_rounds = max_rounds or (n - 1 if n > 1 else 1)
-    C, par_v, par_j, best_cost, best_j, rounds = _leastcost_dp(
-        tensors, n=n, p=p, max_rounds=max_rounds, use_kernel=use_kernel
-    )
+    if use_kernel:
+        impl = kernel_impl or ("pallas" if _on_tpu() else "ref")
+        stats.kernel_impl = impl
+        tensors, _ = stack_requests(rg, [df])
+        Cb, par_vb, par_jb, best_costb, best_jb, rounds = _leastcost_dp_batched(
+            tensors, B=1, n=n, p=p, max_rounds=max_rounds, impl=impl,
+            tiles=tiles,
+        )
+        C, par_v, par_j = Cb[0], par_vb[0], par_jb[0]
+        best_cost, best_j = best_costb[0], best_jb[0]
+    else:
+        tensors = problem_tensors(rg, df)
+        C, par_v, par_j, best_cost, best_j, rounds = _leastcost_dp(
+            tensors, n=n, p=p, max_rounds=max_rounds
+        )
     stats.rounds = int(rounds)
     stats.max_set_size = int(np.sum(np.asarray(C) < BIG / 2))
     if float(best_cost) >= BIG / 2:

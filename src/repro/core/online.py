@@ -90,10 +90,18 @@ class OnlinePlacer:
         rg: ResourceGraph,
         *,
         method: str = "leastcost_jax",
+        use_kernel: bool = False,
         **solve_cfg,
     ):
+        """``use_kernel=True`` serves admissions through the fused batched
+        Pallas DP path (``kernels/minplus/batched``; Pallas on TPU, its
+        fused-jnp mirror elsewhere) — both micro-batched ``admit_many`` and
+        single-request ``admit`` re-solves take it.  Extra ``solve_cfg``
+        (e.g. ``tiles`` or ``kernel_impl``) is forwarded to the backend."""
         self.base = rg
         self.method = method
+        if use_kernel:
+            solve_cfg = dict(solve_cfg, use_kernel=True)
         self.solve_cfg = solve_cfg
         n = rg.n
         self.cap = rg.cap.astype(np.float64).copy()
@@ -172,18 +180,27 @@ class OnlinePlacer:
         return self._commit(df, mapping)
 
     def admit_many(self, dfs: list[DataflowPath]) -> list[Optional[Ticket]]:
-        """Micro-batch concurrent arrivals into one vmapped DP.
+        """Micro-batch concurrent arrivals into one batched DP solve.
 
         All requests solve against one residual snapshot; commits are
         serialized, and any mapping invalidated by an earlier commit in the
         same batch is re-solved individually on the fresh residual.
+
+        On natively-batching backends the DP batch is bucketed to the next
+        power of two (``bucket_batch``: dummy tensor rows, never
+        reconstructed), so a churning arrival process triggers at most
+        log2(max batch) jit specializations per request shape instead of
+        one per distinct micro-batch size.
         """
         if not dfs:
             return []
         self.stats.batches += 1
         snapshot = self.residual_graph()
+        cfg = self.solve_cfg
+        if self.method in engine.BATCHED_METHODS:
+            cfg = dict(cfg, bucket_batch=True)
         mappings, st = engine.solve_batch(
-            snapshot, list(dfs), method=self.method, **self.solve_cfg
+            snapshot, list(dfs), method=self.method, **cfg
         )
         self.stats.solve_ms += st.solve_ms
         out: list[Optional[Ticket]] = []

@@ -98,26 +98,38 @@ def pad_request(df: DataflowPath, p_max: int) -> tuple[np.ndarray, np.ndarray]:
     return prefix, breq[: p_max - 1]
 
 
-def stack_requests(rg: ResourceGraph, dfs: list[DataflowPath]) -> tuple[dict, int]:
+def stack_requests(rg: ResourceGraph, dfs: list[DataflowPath],
+                   pad_to: int | None = None) -> tuple[dict, int]:
     """Stack mixed-``p`` requests against one shared resource network into
-    the batched tensor dict for the vmapped DP.  Returns (tensors, p_max);
+    the batched tensor dict for the batched DP.  Returns (tensors, p_max);
     link matrices are shared (axis None under vmap), per-request tensors are
-    stacked on axis 0."""
+    stacked on axis 0.
+
+    ``pad_to`` pads the batch dimension to a fixed size by repeating the
+    last request (a well-formed dummy problem) — the online placer buckets
+    micro-batches to powers of two this way so a churning arrival process
+    compiles at most log2(max batch) DP specializations per request shape.
+    Callers must ignore results beyond ``len(dfs)``.
+    """
     import jax.numpy as jnp
 
     assert dfs
-    p_max = max(d.p for d in dfs)
-    padded = [pad_request(d, p_max) for d in dfs]
-    base = problem_tensors(rg, dfs[0])
+    reqs = list(dfs)
+    if pad_to is not None:
+        assert pad_to >= len(reqs)
+        reqs += [reqs[-1]] * (pad_to - len(reqs))
+    p_max = max(d.p for d in reqs)
+    padded = [pad_request(d, p_max) for d in reqs]
+    base = problem_tensors(rg, reqs[0])
     tensors = dict(
         cap=base["cap"],
         bw=base["bw"],
         lat=base["lat"],
         prefix=jnp.asarray(np.stack([pr for pr, _ in padded])),
         breq=jnp.asarray(np.stack([bq for _, bq in padded])),
-        src=jnp.asarray([d.src for d in dfs], jnp.int32),
-        dst=jnp.asarray([d.dst for d in dfs], jnp.int32),
-        p_eff=jnp.asarray([d.p for d in dfs], jnp.int32),
+        src=jnp.asarray([d.src for d in reqs], jnp.int32),
+        dst=jnp.asarray([d.dst for d in reqs], jnp.int32),
+        p_eff=jnp.asarray([d.p for d in reqs], jnp.int32),
     )
     return tensors, p_max
 

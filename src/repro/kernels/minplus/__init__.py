@@ -1,3 +1,8 @@
-from . import ops, ref  # noqa: F401
+from . import batched, ops, ref  # noqa: F401
+from .batched import (  # noqa: F401
+    batched_superstep_pallas,
+    batched_superstep_ref,
+    pad_batched_problem,
+)
 from .minplus import masked_minplus_pallas  # noqa: F401
 from .ops import masked_minplus, masked_minplus_ref  # noqa: F401
