@@ -8,11 +8,17 @@
    and an admission + churn exercise with residual-capacity invariants.
 3. Streaming admission under a Poisson arrival/departure process with
    periodic node churn (the paper's dynamic scenario, quantified):
-   steady-state admission rate and re-map latency.
+   steady-state admission rate and re-map latency, plus an offered-load
+   sweep (rate x hold) past the knee of the admission-rate curve.
+4. Multi-tenant fairness at the knee (``repro.service.ControlPlane``):
+   two tenants, weights 3:1, identical offered overload — weighted
+   max-min standing shares vs the FCFS baseline — ending with the
+   background-defrag pass on the churn-fragmented network.
 
 ``python -m benchmarks.bench_placement [--smoke]`` writes the online-service
-numbers to ``BENCH_placement.json`` and the churn process numbers to
-``BENCH_streaming.json`` (both CI artifacts).
+numbers to ``BENCH_placement.json``, the churn process + overload sweep to
+``BENCH_streaming.json`` and the fairness/defrag scenario to
+``BENCH_fairness.json`` (all CI artifacts).
 
 Off-TPU the ``use_kernel=True`` path runs the fused batched jnp mirror of
 the Pallas superstep kernel (``kernels/minplus/batched``) — same math, same
@@ -214,42 +220,56 @@ def run_online(*, n: int = 24, p: int = 6, n_requests: int = 128,
     return record
 
 
+def _poisson_times(rng, rate: float, horizon: float) -> list[float]:
+    ts, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        if t >= horizon:
+            break
+        ts.append(t)
+    return ts
+
+
+def _warm_jit(rg, p: int, max_batch: float, use_kernel: bool) -> int:
+    """Warm the jit specializations an event loop will hit (power-of-two DP
+    buckets + the single-request re-solve shape), so admit/remap latencies
+    measure steady-state solves, not first-call compiles."""
+    warm_df = _request_stream(rg, 1, p, seed0=1)[0]
+    solve(rg, warm_df, method="leastcost_jax", use_kernel=use_kernel)
+    warm_max = 1 << max(1, int(np.ceil(np.log2(max(max_batch, 2)))))
+    b = 1
+    while b <= warm_max:
+        solve_batch(rg, [warm_df] * b, method="leastcost_jax",
+                    use_kernel=use_kernel, bucket_batch=True)
+        b *= 2
+    return warm_max
+
+
 def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
                   hold: float = 2.0, horizon: float = 10.0, tick: float = 0.25,
-                  fail_every: float = 2.5, seed: int = 11,
+                  fail_every: float = 2.5, warmup: float = 2.0, seed: int = 11,
                   use_kernel: bool = True,
-                  out_path: str = "BENCH_streaming.json"):
+                  out_path: str | None = "BENCH_streaming.json"):
     """Poisson arrival/departure process against one shared network.
 
     Requests arrive at ``rate``/unit-time, hold capacity for Exp(``hold``)
     and depart; every ``fail_every`` units a busy node fails (displacing its
     tickets through re-admission) and the previously failed node restores.
     Virtual time drives the process; wall clock is measured only around the
-    micro-batched admissions and the churn re-maps.
+    micro-batched admissions and the churn re-maps.  ``out_path=None`` skips
+    the JSON write (used by the overload sweep).
+
+    ``steady_admission_rate`` counts only arrivals after ``warmup``: the
+    ramp-up (an empty network admits everything) otherwise masks the
+    saturation knee the overload sweep is looking for.
     """
     rng = np.random.default_rng(seed)
     rg = waxman(n, seed=seed)
     placer = OnlinePlacer(rg, use_kernel=use_kernel)
-
-    # Warm the jit specializations the event loop will hit (power-of-two DP
-    # buckets + the single-request re-solve shape), so admit/remap latencies
-    # measure steady-state solves, not first-call compiles.
-    warm_df = _request_stream(rg, 1, p, seed0=1)[0]
-    solve(rg, warm_df, method="leastcost_jax", use_kernel=use_kernel)
-    warm_max = 1 << max(1, int(np.ceil(np.log2(max(4 * rate * tick, 2)))))
-    b = 1
-    while b <= warm_max:
-        solve_batch(rg, [warm_df] * b, method="leastcost_jax",
-                    use_kernel=use_kernel, bucket_batch=True)
-        b *= 2
+    warm_max = _warm_jit(rg, p, 4 * rate * tick, use_kernel)
 
     # Poisson arrivals over the horizon
-    arrivals, t = [], 0.0
-    while True:
-        t += rng.exponential(1.0 / rate)
-        if t >= horizon:
-            break
-        arrivals.append(t)
+    arrivals = _poisson_times(rng, rate, horizon)
     reqs = _request_stream(rg, len(arrivals), p, seed0=int(seed) * 131)
 
     departures: list[tuple[float, int]] = []  # heap of (t_depart, tid)
@@ -258,6 +278,7 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
     displaced_total = remapped_total = 0
     offered = admitted_arrivals = 0  # arrival stream only (churn re-
     # admissions are tracked separately via placer.stats)
+    offered_steady = admitted_steady = 0  # arrivals after `warmup`
     occupancy: list[int] = []
     failed_node: int | None = None
     next_fail = fail_every
@@ -287,9 +308,8 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
                 remap_ms.append(1e3 * (time.perf_counter() - t0))
                 displaced_total += len(rem) + len(drop)
                 remapped_total += len(rem)
-                for tk in rem:
-                    heapq.heappush(
-                        departures, (now + rng.exponential(hold), tk.tid))
+                # re-mapped tickets keep their tid, so the originally
+                # scheduled departure entries stay valid — nothing to re-push
         # micro-batch the tick's arrivals
         batch = []
         while i < len(arrivals) and arrivals[i] <= now:
@@ -297,12 +317,16 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
             i += 1
         if batch:
             offered += len(batch)
+            if now >= warmup:
+                offered_steady += len(batch)
             t0 = time.perf_counter()
             tickets = placer.admit_many(batch)
             admit_ms.append(1e3 * (time.perf_counter() - t0))
             for tk in tickets:
                 if tk is not None:
                     admitted_arrivals += 1
+                    if now >= warmup:
+                        admitted_steady += 1
                     heapq.heappush(
                         departures, (now + rng.exponential(hold), tk.tid))
         occupancy.append(len(placer.tickets))
@@ -318,6 +342,8 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
         "admitted_total": st.admitted,  # incl. churn re-admissions
         "rejected_total": st.rejected,
         "admission_rate": admitted_arrivals / max(offered, 1),
+        "warmup": warmup,
+        "steady_admission_rate": admitted_steady / max(offered_steady, 1),
         "steady_state_occupancy": float(np.mean(occupancy)) if occupancy else 0,
         "batches": st.batches,
         "batch_conflicts": st.batch_conflicts,
@@ -332,8 +358,301 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
         "solve_ms_total": st.solve_ms,
         "invariants_ok": True,
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2)
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+def run_overload_sweep(*, rates=(12.0, 24.0, 48.0, 96.0, 192.0),
+                       n: int = 24, p: int = 5, hold: float = 4.0,
+                       horizon: float = 6.0, warmup: float = 2.0,
+                       knee_threshold: float = 0.9,
+                       seed: int = 11, use_kernel: bool = True,
+                       baseline_rate: float = 24.0,
+                       baseline_hold: float = 2.0,
+                       out_path: str | None = "BENCH_streaming.json"):
+    """Sweep offered load (arrival rate x hold time) past the admission knee.
+
+    The ROADMAP observation: at the original operating point the service
+    admits >90% — the interesting regime (where fairness and defrag matter)
+    starts where admission collapses.  Offered concurrency is
+    ``rate x hold``, so the sweep fixes a longer ``hold`` and doubles the
+    rate until *steady-state* admission (ramp-up excluded; see
+    ``run_streaming(warmup=...)``) falls below ``knee_threshold``.  That
+    first saturated point is recorded as the knee; the fairness benchmark
+    (``run_fairness``) runs past it on the same network.
+    """
+    base = run_streaming(n=n, p=p, rate=baseline_rate, hold=baseline_hold,
+                         horizon=horizon, warmup=warmup, seed=seed,
+                         use_kernel=use_kernel, out_path=None)
+    sweep = []
+    for r in sorted(rates):
+        rec = run_streaming(n=n, p=p, rate=float(r), hold=hold,
+                            horizon=horizon, warmup=warmup, seed=seed,
+                            use_kernel=use_kernel, out_path=None)
+        sweep.append({
+            "rate": float(r),
+            "hold": hold,
+            "offered_concurrency": float(r) * hold,
+            "offered": rec["offered"],
+            "admission_rate": rec["admission_rate"],
+            "steady_admission_rate": rec["steady_admission_rate"],
+            "occupancy": rec["steady_state_occupancy"],
+            "admit_ms_mean": rec["admit_ms_mean"],
+        })
+    found = next(
+        (s for s in sweep if s["steady_admission_rate"] < knee_threshold),
+        None,
+    )
+    knee = found if found is not None else sweep[-1]
+    record = {
+        "baseline": base,
+        "sweep": sweep,
+        "knee": {
+            "rate": knee["rate"],
+            "hold": knee["hold"],
+            "steady_admission_rate": knee["steady_admission_rate"],
+            "threshold": knee_threshold,
+            # False = the sweep never crossed the threshold and the "knee"
+            # is just its last point; downstream overload scenarios (and
+            # their CI gates) are then meaningless — widen the sweep.
+            "saturated": found is not None,
+        },
+    }
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+def run_fairness(*, knee_rate: float, n: int = 24, p: int = 5,
+                 overload_factor: float = 1.5, weights=(3.0, 1.0),
+                 hold: float = 4.0, horizon: float = 8.0, tick: float = 0.25,
+                 fail_every: float = 2.5, warmup: float = 2.0,
+                 micro_batch: int = 32, seed: int = 11,
+                 use_kernel: bool = True,
+                 out_path: str | None = "BENCH_fairness.json"):
+    """Two-tenant overload scenario past the admission knee, weights 3:1.
+
+    Runs on the *same* network and request distribution as the overload
+    sweep, at ``overload_factor`` x the knee rate.  One shared Poisson
+    arrival process is split round-robin between the tenants, so both offer
+    exactly the same load and arrival order carries no information about
+    entitlement:
+
+    - **weighted** — the control plane's weighted max-min scheduler; the
+      steady-state standing committed capacity should split by weight
+      (3:1 -> fractions 0.75/0.25) within ~10%.
+    - **fcfs** — the bare ``OnlinePlacer`` admitting in arrival order; both
+      tenants then hold ~equal capacity, >25% off their weighted shares.
+
+    Ends with the background-defrag exercise on the churn-fragmented
+    network: after the node fail/restore cycles, restore everything and run
+    one ``defrag()`` pass — it must strictly improve the global objective
+    (or no-op) and re-admit previously-rejected (queued) requests.
+    """
+    from repro.service import ControlPlane, FairSharePolicy
+
+    rng = np.random.default_rng(seed)
+    rg = waxman(n, seed=seed)
+    rate_total = float(knee_rate) * overload_factor
+    names = ("gold", "bronze")
+    w = dict(zip(names, weights))
+    frac = {t: w[t] / sum(w.values()) for t in names}
+    times = _poisson_times(rng, rate_total, horizon)
+    stream = _request_stream(rg, len(times), p, seed0=seed * 977)
+    # round-robin split: identical offered load, interleaved arrival order
+    arrivals = {t: [] for t in names}
+    reqs = {t: [] for t in names}
+    for k, (at, df) in enumerate(zip(times, stream)):
+        t = names[k % 2]
+        arrivals[t].append(at)
+        reqs[t].append(df)
+    _warm_jit(rg, p, max(micro_batch, 4 * rate_total * tick), use_kernel)
+
+    def _churn_tick(placer, now, state):
+        """Shared fail/restore cycle: restore the previous casualty and pick
+        the busiest intermediate node for the caller to fail."""
+        if now < state["next_fail"]:
+            return
+        state["next_fail"] += fail_every
+        if state["failed"] is not None:
+            placer.restore_node(state["failed"])
+            state["failed"] = None
+        load = np.zeros(n)
+        for tk in placer.tickets.values():
+            for v in tk.mapping.route:
+                if v not in (tk.df.src, tk.df.dst):
+                    load[v] += 1
+        if load.max() > 0:
+            state["failed"] = int(load.argmax())
+            state["cycles"] += 1
+            return state["failed"]
+        return None
+
+    # ---- weighted: the control plane ------------------------------------
+    cp = ControlPlane(rg, policy=FairSharePolicy(slack=0.4),
+                      micro_batch=micro_batch, max_attempts=10,
+                      use_kernel=use_kernel)
+    for t in names:
+        cp.register_tenant(t, weight=w[t])
+    # departure entries carry (rid, tid): a request displaced to the queue
+    # and later re-admitted gets a NEW ticket (new tid) and a new timer —
+    # its stale entry must not release it early.  In-place re-mapping
+    # preserves the tid, so those entries stay valid.
+    dep: list[tuple[float, int, int]] = []
+    scheduled: dict[int, int] = {}  # rid -> tid of the armed entry
+    samples = {t: [] for t in names}
+    backlogged_ticks = total_ticks = 0
+    state = {"next_fail": fail_every, "failed": None, "cycles": 0}
+    idx = {t: 0 for t in names}
+    drng = np.random.default_rng(seed + 1)
+
+    def _arm(tk, when):
+        rid = cp.rid_of(tk)
+        if rid is not None and scheduled.get(rid) != tk.tid:
+            scheduled[rid] = tk.tid
+            heapq.heappush(dep, (when, rid, tk.tid))
+
+    now = 0.0
+    while now < horizon:
+        now = min(now + tick, horizon)
+        while dep and dep[0][0] <= now:
+            _, rid, tid = heapq.heappop(dep)
+            entry = cp.active.get(rid)
+            if entry is not None and entry[1].tid == tid:
+                cp.release(rid)
+                scheduled.pop(rid, None)
+        victim = _churn_tick(cp.placer, now, state)
+        if victim is not None:
+            alive, _requeued = cp.fail_node(victim)
+            for tk in alive:  # preemptive rescues carry a NEW tid: arm them
+                _arm(tk, now + drng.exponential(hold))
+        for t in names:
+            while idx[t] < len(arrivals[t]) and arrivals[t][idx[t]] <= now:
+                cp.submit(t, reqs[t][idx[t]])
+                idx[t] += 1
+        for tk in cp.pump():
+            _arm(tk, now + drng.exponential(hold))
+        if now >= warmup:
+            held = cp.committed_capacity()
+            for t in names:
+                samples[t].append(held[t])
+            total_ticks += 1
+            backlogged_ticks += all(
+                cp.tenants[t].queue for t in names
+            )
+    cp.check_invariants()
+
+    def _shares(mean_held):
+        total = sum(mean_held.values())
+        actual = {t: mean_held[t] / max(total, 1e-12) for t in names}
+        dev = {t: abs(actual[t] - frac[t]) / frac[t] for t in names}
+        return actual, dev
+
+    mean_w = {t: float(np.mean(samples[t])) for t in names}
+    actual_w, dev_w = _shares(mean_w)
+    weighted = {
+        "mean_committed": mean_w,
+        "actual_fractions": actual_w,
+        "target_fractions": frac,
+        "deviation": dev_w,
+        "max_deviation": max(dev_w.values()),
+        "backlogged_frac": backlogged_ticks / max(total_ticks, 1),
+        "preempted": cp.placer.stats.preempted,
+        "dropped": cp.conservation()["dropped"],
+        "queued_end": cp.conservation()["queued"],
+        "conservation_ok": cp.conservation()["ok"],
+    }
+
+    # ---- defrag on the churn-fragmented end state -----------------------
+    if state["failed"] is not None:  # run against the fully-restored net
+        cp.restore_node(state["failed"])
+        state["failed"] = None
+    queued_before = cp.conservation()["queued"]
+    res = cp.defrag()
+    cp.check_invariants()
+    defrag_rec = {
+        "churn_cycles": state["cycles"],
+        "standing": res.standing,
+        "queued_before": queued_before,
+        "committed": res.committed,
+        "repacked": res.repacked,
+        "objective_before": list(res.objective_before),
+        "objective_after": list(res.objective_after),
+        "moved": res.moved,
+        "readmitted": len(res.readmitted),
+        "never_regresses": res.objective_after >= res.objective_before,
+        "invariants_ok": True,
+    }
+
+    # ---- FCFS baseline: same traces through the bare placer -------------
+    placer = OnlinePlacer(rg, use_kernel=use_kernel)
+    merged = sorted(
+        (at, t, i)
+        for t in names for i, at in enumerate(arrivals[t])
+    )
+    dep2: list[tuple[float, int]] = []
+    samples2 = {t: [] for t in names}
+    state2 = {"next_fail": fail_every, "failed": None, "cycles": 0}
+    drng2 = np.random.default_rng(seed + 1)
+    j = 0
+    now = 0.0
+    while now < horizon:
+        now = min(now + tick, horizon)
+        while dep2 and dep2[0][0] <= now:
+            _, tid = heapq.heappop(dep2)
+            if tid in placer.tickets:
+                placer.release(tid)
+        victim = _churn_tick(placer, now, state2)
+        if victim is not None:
+            placer.fail_node(victim)
+        batch, metas = [], []
+        while j < len(merged) and merged[j][0] <= now:
+            _, t, i = merged[j]
+            batch.append(reqs[t][i])
+            metas.append((t, 0))
+            j += 1
+        for tk in placer.admit_many(batch, metas=metas):
+            if tk is not None:
+                heapq.heappush(dep2, (now + drng2.exponential(hold), tk.tid))
+        if now >= warmup:
+            held = {t: 0.0 for t in names}
+            for tk in placer.tickets.values():
+                held[tk.tenant] += float(np.sum(tk.df.creq))
+            for t in names:
+                samples2[t].append(held[t])
+    placer.check_invariants()
+    mean_f = {t: float(np.mean(samples2[t])) for t in names}
+    actual_f, dev_f = _shares(mean_f)
+    fcfs = {
+        "mean_committed": mean_f,
+        "actual_fractions": actual_f,
+        "target_fractions": frac,
+        "deviation": dev_f,
+        "max_deviation": max(dev_f.values()),
+    }
+
+    record = {
+        "n": n, "p": p, "knee_rate": float(knee_rate),
+        "overload_factor": overload_factor, "rate_total": rate_total,
+        "weights": w, "hold": hold, "horizon": horizon, "tick": tick,
+        "fail_every": fail_every, "warmup": warmup,
+        "micro_batch": micro_batch, "use_kernel": use_kernel,
+        "weighted": weighted,
+        "fcfs": fcfs,
+        "defrag": defrag_rec,
+        "criterion": {
+            "weighted_within_10pct": weighted["max_deviation"] <= 0.10,
+            "fcfs_deviation_gt_25pct": fcfs["max_deviation"] > 0.25,
+            "defrag_never_regresses": defrag_rec["never_regresses"],
+            "defrag_readmitted_any": defrag_rec["readmitted"] >= 1,
+        },
+    }
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
     return record
 
 
@@ -352,7 +671,8 @@ def run():
             f"{rec['churn']['displaced']}"
         ),
     })
-    srec = run_streaming()
+    swrec = run_overload_sweep()
+    srec = swrec["baseline"]
     rows.append({
         "name": "placement_streaming_poisson",
         "us_per_call": 1e3 * srec["admit_ms_mean"],
@@ -360,7 +680,19 @@ def run():
             f"admission_rate={srec['admission_rate']:.2f};"
             f"occupancy={srec['steady_state_occupancy']:.1f};"
             f"remap_ms_p95={srec['remap_ms_p95']:.1f};"
-            f"dropped={srec['dropped']}"
+            f"dropped={srec['dropped']};"
+            f"knee_rate={swrec['knee']['rate']:.0f}"
+        ),
+    })
+    frec = run_fairness(knee_rate=swrec["knee"]["rate"])
+    rows.append({
+        "name": "placement_fairness_overload",
+        "us_per_call": 0.0,
+        "derived": (
+            f"weighted_dev={frec['weighted']['max_deviation']:.3f};"
+            f"fcfs_dev={frec['fcfs']['max_deviation']:.3f};"
+            f"defrag_readmitted={frec['defrag']['readmitted']};"
+            f"preempted={frec['weighted']['preempted']}"
         ),
     })
     return rows
@@ -371,7 +703,8 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="online + streaming only, small sizes (CI artifact)")
+                    help="online + streaming + fairness only, small sizes "
+                         "(CI artifact)")
     args = ap.parse_args()
     if args.smoke:
         rec = run_online(
@@ -379,8 +712,15 @@ if __name__ == "__main__":
             curve_kwargs=dict(n_list=(16, 24), batch_list=(1, 8, 32),
                               reps=20),
         )
-        srec = run_streaming(n=20, rate=16.0, horizon=6.0)
+        swrec = run_overload_sweep(
+            n=20, rates=(24.0, 48.0, 96.0, 192.0), horizon=5.0,
+            baseline_rate=16.0,
+        )
+        frec = run_fairness(knee_rate=swrec["knee"]["rate"], n=20,
+                            horizon=6.0, warmup=2.0)
     else:
         rec = run_online()
-        srec = run_streaming()
-    print(json.dumps({"online": rec, "streaming": srec}, indent=2))
+        swrec = run_overload_sweep()
+        frec = run_fairness(knee_rate=swrec["knee"]["rate"])
+    print(json.dumps(
+        {"online": rec, "streaming": swrec, "fairness": frec}, indent=2))

@@ -58,6 +58,12 @@ class Stats:
     virtual_time: float = 0.0  # simulator virtual completion time
     solve_ms: float = 0.0  # wall clock inside the backend
     batch_size: int = 1
+    # service-layer counters (repro.service control plane): how much solver
+    # work was spent displacing lower-class tickets / re-optimizing the
+    # standing allocation, surfaced next to the per-solve numbers so a
+    # benchmark row tells the whole admission story.
+    preemptions: int = 0  # tickets displaced by higher-class admissions
+    defrag_rounds: int = 0  # global re-optimization passes attempted
 
 
 def _unify(native, method: str) -> Stats:
@@ -80,6 +86,8 @@ def _unify(native, method: str) -> Stats:
     s.virtual_time = float(
         getattr(native, "completed_at", None) or getattr(native, "virtual_time", 0.0)
     )
+    s.preemptions = int(getattr(native, "preempted", 0))
+    s.defrag_rounds = int(getattr(native, "defrag_rounds", 0))
     return s
 
 
@@ -160,6 +168,8 @@ def solve_batch(
             stats.max_set_size = max(stats.max_set_size, st.max_set_size)
             stats.fallback_used |= st.fallback_used
             stats.validated &= st.validated
+            stats.preemptions += st.preemptions
+            stats.defrag_rounds += st.defrag_rounds
     stats.batch_size = len(dfs)
     stats.solve_ms = 1e3 * (time.perf_counter() - t0)
     return mappings, stats

@@ -19,9 +19,15 @@ Eidenbenz & Locher 2016 — concurrent in-network stream processing).
   individually — optimistic concurrency at micro-batch granularity;
 - ``fail_node`` / ``fail_link`` (+ ``restore_*``) — simulated churn.  A
   failure displaces every ticket whose route uses the failed element; the
-  placer releases them and re-admits on the degraded residual network,
-  returning (remapped, dropped) — the paper's dynamic re-mapping scenario
-  served at throughput.
+  placer releases them and re-admits on the degraded residual network
+  (highest preemption class first, tids preserved), returning
+  ``(remapped new tickets, dropped old tickets)`` — the paper's dynamic
+  re-mapping scenario served at throughput;
+- service-layer hooks for the multi-tenant control plane
+  (``repro.service``): per-ticket ``tenant``/``klass`` metadata,
+  ``snapshot``/``restore`` for transactional multi-step mutations,
+  ``admit_preempting`` (conservative, strictly class-ordered preemption)
+  and ``rekey`` (stable ticket handles across re-mapping/defrag).
 
 Invariant (checked by ``check_invariants``): for every node and link,
 ``base == residual + sum(ticket loads)`` and ``residual >= 0``.
@@ -30,7 +36,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional
+from types import MappingProxyType
+from typing import Mapping as MappingT, Optional, Sequence
 
 import numpy as np
 
@@ -38,15 +45,32 @@ from . import engine
 from .graph import INF, DataflowPath, Mapping, ResourceGraph, validate_mapping
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Ticket:
-    """A committed placement: the handle for ``release`` / churn re-mapping."""
+    """A committed placement: the handle for ``release`` / churn re-mapping.
+
+    ``node_load`` / ``edge_load`` are read-only views over private defensive
+    copies: the placer's conservation invariant
+    (``base == residual + sum(ticket loads)``) is computed from these, so a
+    caller must not be able to mutate them after commit — item assignment
+    raises ``TypeError`` and the dict a caller passed in is never aliased.
+
+    ``tenant`` / ``klass`` are control-plane metadata (``repro.service``):
+    the owning tenant and the preemption class.  A ticket may only ever be
+    preempted by an admission of *strictly greater* class.
+    """
 
     tid: int
     df: DataflowPath
     mapping: Mapping
-    node_load: dict  # resource node -> committed compute
-    edge_load: dict  # (u, v) -> committed bandwidth
+    node_load: MappingT[int, float]  # resource node -> committed compute
+    edge_load: MappingT[tuple, float]  # (u, v) -> committed bandwidth
+    tenant: str = ""
+    klass: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "node_load", MappingProxyType(dict(self.node_load)))
+        object.__setattr__(self, "edge_load", MappingProxyType(dict(self.edge_load)))
 
 
 @dataclasses.dataclass
@@ -56,8 +80,11 @@ class OnlineStats:
     released: int = 0
     remapped: int = 0
     dropped: int = 0
+    preempted: int = 0  # released to make room for a higher-class admission
     batches: int = 0
     batch_conflicts: int = 0  # re-solved individually after a stale batch solve
+    defrag_rounds: int = 0  # global re-optimization passes attempted
+    defrag_commits: int = 0  # ... that improved the objective and committed
     solve_ms: float = 0.0
 
 
@@ -136,25 +163,74 @@ class OnlinePlacer:
 
     # -- commit / release ---------------------------------------------------
 
-    def _commit(self, df: DataflowPath, mapping: Mapping) -> Ticket:
+    def _commit(self, df: DataflowPath, mapping: Mapping, *,
+                tenant: str = "", klass: int = 0) -> Ticket:
         node_load = _node_loads(df, mapping)
         edge_load = _edge_loads(df, mapping)
         for v, c in node_load.items():
             self.cap[v] -= c
         for (u, v), b in edge_load.items():
             self.bw[u, v] -= b
-        t = Ticket(next(self._tid), df, mapping, node_load, edge_load)
+        t = Ticket(next(self._tid), df, mapping, node_load, edge_load,
+                   tenant=tenant, klass=klass)
         self.tickets[t.tid] = t
         return t
 
-    def release(self, ticket: Ticket | int) -> None:
+    def release(self, ticket: Ticket | int, *,
+                reason: Optional[str] = "released") -> Ticket:
+        """Return a ticket's capacity to the residual.
+
+        ``reason`` selects the stats counter: ``"released"`` (a normal
+        departure), ``"preempted"`` (displaced to make room for a
+        higher-class admission), or ``None`` (internal bookkeeping, e.g. the
+        defrag pass clearing the standing set before the re-solve — counted
+        by its own counters instead).
+        """
         tid = ticket if isinstance(ticket, int) else ticket.tid
         t = self.tickets.pop(tid)
         for v, c in t.node_load.items():
             self.cap[v] += c
         for (u, v), b in t.edge_load.items():
             self.bw[u, v] += b
-        self.stats.released += 1
+        if reason == "released":
+            self.stats.released += 1
+        elif reason == "preempted":
+            self.stats.preempted += 1
+        return t
+
+    # -- snapshot / atomic commit hooks (service-layer defrag + preemption) -
+
+    def snapshot(self) -> dict:
+        """Copy-out of the full service state (residuals, liveness, tickets,
+        stats).  With :meth:`restore` this brackets speculative multi-step
+        mutations — preemption probing, the defrag re-solve — so they either
+        commit in full or leave no trace."""
+        return {
+            "cap": self.cap.copy(),
+            "bw": self.bw.copy(),
+            "node_up": self.node_up.copy(),
+            "link_up": self.link_up.copy(),
+            "tickets": dict(self.tickets),
+            "stats": dataclasses.replace(self.stats),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Roll back to a :meth:`snapshot` (the snapshot stays reusable)."""
+        self.cap = snap["cap"].copy()
+        self.bw = snap["bw"].copy()
+        self.node_up = snap["node_up"].copy()
+        self.link_up = snap["link_up"].copy()
+        self.tickets = dict(snap["tickets"])
+        self.stats = dataclasses.replace(snap["stats"])
+
+    def rekey(self, new: Ticket, tid: int) -> Ticket:
+        """Re-register a freshly committed ticket under a prior tid, so the
+        handle an external holder keeps (control plane, departure timers)
+        survives re-mapping and defrag re-placement."""
+        kept = dataclasses.replace(new, tid=tid)
+        del self.tickets[new.tid]
+        self.tickets[tid] = kept
+        return kept
 
     # -- admission ----------------------------------------------------------
 
@@ -165,7 +241,8 @@ class OnlinePlacer:
         ok, _why = validate_mapping(rg, df, mapping)
         return ok
 
-    def admit(self, df: DataflowPath) -> Optional[Ticket]:
+    def admit(self, df: DataflowPath, *, tenant: str = "",
+              klass: int = 0) -> Optional[Ticket]:
         """Place one request against the current residual network."""
         if not (self.node_up[df.src] and self.node_up[df.dst]):
             self.stats.rejected += 1
@@ -177,9 +254,70 @@ class OnlinePlacer:
             self.stats.rejected += 1
             return None
         self.stats.admitted += 1
-        return self._commit(df, mapping)
+        return self._commit(df, mapping, tenant=tenant, klass=klass)
 
-    def admit_many(self, dfs: list[DataflowPath]) -> list[Optional[Ticket]]:
+    def admit_preempting(
+        self, df: DataflowPath, *, tenant: str = "", klass: int = 0,
+        max_preempt: int = 8,
+    ) -> tuple[Optional[Ticket], list[Ticket]]:
+        """Admit, displacing strictly-lower-class tickets if necessary.
+
+        Victims are probed lowest class first; within a class, tickets
+        loading the *target node* — the node where residual plus
+        preemptable load peaks, i.e. where released capacity can
+        accumulate into a hole big enough for the request — go first, then
+        larger tickets, then newer.  After each release the request is
+        re-solved on the freed residual.  If no victim set below ``klass``
+        makes the request feasible the whole probe rolls back — preemption
+        is *conservative*: capacity is never destroyed on a failed attempt,
+        and a class-k ticket is only ever displaced by an admission of
+        class > k.  Returns ``(ticket, preempted)``; the caller owns
+        re-queueing the preempted work (e.g. through its tenant queue in
+        the control plane).
+        """
+        rejected0 = self.stats.rejected  # a served request is not a rejection
+        t = self.admit(df, tenant=tenant, klass=klass)
+        if t is not None:
+            return t, []
+        candidates = [v for v in self.tickets.values() if v.klass < klass]
+        if not candidates:
+            return None, []
+        # concentrate releases where they can open the largest hole
+        # (downed nodes can never host the request, whatever their cap)
+        potential = np.where(self.node_up, self.cap, -np.inf)
+        for v in candidates:
+            for node, c in v.node_load.items():
+                potential[node] += c
+        target = int(np.argmax(potential))
+        victims = sorted(
+            candidates,
+            key=lambda v: (
+                v.klass,
+                -v.node_load.get(target, 0.0),
+                -sum(v.node_load.values()),
+                -v.tid,
+            ),
+        )
+        snap = self.snapshot()
+        preempted: list[Ticket] = []
+        for v in victims[:max_preempt]:
+            self.release(v, reason="preempted")
+            preempted.append(v)
+            t = self.admit(df, tenant=tenant, klass=klass)
+            if t is not None:
+                # probe rejections along the way are not real rejections
+                self.stats.rejected = rejected0
+                return t, preempted
+        solve_ms = self.stats.solve_ms  # probes did real solver work
+        self.restore(snap)
+        self.stats.solve_ms = solve_ms
+        return None, []
+
+    def admit_many(
+        self,
+        dfs: list[DataflowPath],
+        metas: Optional[Sequence[tuple[str, int]]] = None,
+    ) -> list[Optional[Ticket]]:
         """Micro-batch concurrent arrivals into one batched DP solve.
 
         All requests solve against one residual snapshot; commits are
@@ -194,6 +332,8 @@ class OnlinePlacer:
         """
         if not dfs:
             return []
+        if metas is None:
+            metas = [("", 0)] * len(dfs)
         self.stats.batches += 1
         snapshot = self.residual_graph()
         cfg = self.solve_cfg
@@ -205,7 +345,7 @@ class OnlinePlacer:
         self.stats.solve_ms += st.solve_ms
         out: list[Optional[Ticket]] = []
         current = snapshot  # refreshed only on commit (the only mutation)
-        for df, m in zip(dfs, mappings):
+        for df, m, (tenant, klass) in zip(dfs, mappings, metas):
             if (
                 m is not None
                 and self.node_up[df.src]
@@ -213,13 +353,13 @@ class OnlinePlacer:
                 and self._admissible(df, m, current)
             ):
                 self.stats.admitted += 1
-                out.append(self._commit(df, m))
+                out.append(self._commit(df, m, tenant=tenant, klass=klass))
                 current = self.residual_graph()
             elif m is not None:
                 # stale snapshot (an earlier commit in this batch took the
                 # capacity) — optimistic-concurrency retry, individually
                 self.stats.batch_conflicts += 1
-                t = self.admit(df)
+                t = self.admit(df, tenant=tenant, klass=klass)
                 out.append(t)
                 if t is not None:
                     current = self.residual_graph()
@@ -233,26 +373,39 @@ class OnlinePlacer:
     def _displaced(self, pred) -> list[Ticket]:
         return [t for t in self.tickets.values() if pred(t)]
 
-    def _remap(self, displaced: list[Ticket]) -> tuple[list[Ticket], list[DataflowPath]]:
+    def _remap(self, displaced: list[Ticket]) -> tuple[list[Ticket], list[Ticket]]:
+        """Release the displaced tickets and re-admit them on the degraded
+        residual, highest preemption class first (a class never waits behind
+        a lower one for the post-failure capacity).  Re-admitted tickets keep
+        their original ``tid`` (:meth:`rekey`), so handles held outside the
+        placer — control-plane records, departure timers — stay valid across
+        re-mapping.  Returns ``(remapped new tickets, dropped old tickets)``;
+        dropped entries carry their ``df``/``tenant``/``klass`` so the caller
+        can re-queue or escalate them.
+        """
+        displaced = sorted(displaced, key=lambda t: (-t.klass, t.tid))
         for t in displaced:
-            self.release(t)
+            self.release(t, reason=None)
         remapped, dropped = [], []
-        tickets = self.admit_many([t.df for t in displaced])
+        tickets = self.admit_many(
+            [t.df for t in displaced],
+            metas=[(t.tenant, t.klass) for t in displaced],
+        )
         for t, nt in zip(displaced, tickets):
             if nt is None:
-                dropped.append(t.df)
+                dropped.append(t)
                 self.stats.dropped += 1
             else:
-                remapped.append(nt)
+                remapped.append(self.rekey(nt, t.tid))
                 self.stats.remapped += 1
         return remapped, dropped
 
-    def fail_node(self, v: int) -> tuple[list[Ticket], list[DataflowPath]]:
+    def fail_node(self, v: int) -> tuple[list[Ticket], list[Ticket]]:
         """Take node ``v`` down; re-map every placement routed through it."""
         self.node_up[v] = False
         return self._remap(self._displaced(lambda t: v in t.mapping.route))
 
-    def fail_link(self, u: int, v: int) -> tuple[list[Ticket], list[DataflowPath]]:
+    def fail_link(self, u: int, v: int) -> tuple[list[Ticket], list[Ticket]]:
         """Take the (symmetric) link down; re-map placements using it."""
         self.link_up[u, v] = self.link_up[v, u] = False
         return self._remap(

@@ -1,0 +1,23 @@
+"""Multi-tenant placement control plane (service layer).
+
+The layer between ``core.online.OnlinePlacer`` and the launch/serving
+front ends:
+
+  policy:       TenantConfig, weighted max-min shares (water-filling),
+                FairSharePolicy drain scheduling, preemption-class rules
+  controlplane: ControlPlane — per-tenant queues, fair admission into
+                ``admit_many`` micro-batches, preemption, churn
+                reconciliation, conservation ledger
+  defrag:       atomic global re-optimization of the standing ticket set
+"""
+from .controlplane import ControlPlane, Request, TenantState  # noqa: F401
+from .defrag import DefragResult, defrag, global_objective  # noqa: F401
+from .policy import (  # noqa: F401
+    CLASS_BEST_EFFORT,
+    CLASS_CRITICAL,
+    CLASS_STANDARD,
+    FairSharePolicy,
+    TenantConfig,
+    maxmin_shares,
+    may_preempt,
+)

@@ -1,0 +1,433 @@
+"""Multi-tenant placement control plane over :class:`OnlinePlacer`.
+
+The layer between the online placer and the serving front end.  Tenants
+register with a weight (and optional budget); arrivals queue per tenant
+(class-major, FIFO within a class) and :meth:`ControlPlane.pump` drains the
+queues into ``admit_many`` micro-batches under the weighted max-min
+:class:`FairSharePolicy` — under overload, residual capacity divides by
+weight instead of by arrival order.
+Every request carries a preemption class; rejected high-class admissions
+and churn re-mapping may displace strictly-lower-class tickets
+(:meth:`OnlinePlacer.admit_preempting`), and preempted work re-enters
+through its tenant queue, never silently dropped.  A background
+:meth:`defrag` pass re-solves the whole standing set as one batched kernel
+solve and commits atomically only on improvement (``service.defrag``).
+
+Request lifecycle (conservation-checked by the fuzz tests)::
+
+    submit -> queued -> active -> released
+                 ^         |
+                 |         +-- preempted / displaced-by-failure (requeued)
+                 +-- retried (admission failed, attempts left)
+    queued/active -> dropped (attempts exhausted, or infeasible)
+
+``conservation()`` returns the ledger; ``submitted == queued + active +
+released + dropped`` holds after every public call.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from ..core import engine
+from ..core.graph import DataflowPath, ResourceGraph
+from ..core.online import OnlinePlacer, Ticket
+from . import defrag as defrag_mod
+from .policy import FairSharePolicy, TenantConfig, may_preempt
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    """One submitted placement request (``eq=False``: identity semantics so
+    deque removal and bookkeeping never compare numpy payloads)."""
+
+    rid: int
+    tenant: str
+    df: DataflowPath
+    klass: int = 0
+    attempts: int = 0
+    creq_sum: float = 0.0
+
+    def __post_init__(self):
+        self.creq_sum = float(np.sum(self.df.creq))
+
+
+@dataclasses.dataclass
+class TenantState:
+    cfg: TenantConfig
+    queue: collections.deque = dataclasses.field(
+        default_factory=collections.deque
+    )
+    submitted: int = 0
+    admitted: int = 0
+    released: int = 0
+    dropped: int = 0
+    preempted: int = 0  # times this tenant's work was displaced (then requeued)
+
+
+class ControlPlane:
+    """Fair admission + preemption classes + background defrag."""
+
+    def __init__(
+        self,
+        rg: ResourceGraph,
+        *,
+        policy: Optional[FairSharePolicy] = None,
+        micro_batch: int = 32,
+        max_attempts: int = 8,
+        preempt: bool = True,
+        method: str = "leastcost_jax",
+        use_kernel: bool = False,
+        **solve_cfg,
+    ):
+        self.placer = OnlinePlacer(
+            rg, method=method, use_kernel=use_kernel, **solve_cfg
+        )
+        self.policy = policy or FairSharePolicy()
+        self.micro_batch = int(micro_batch)
+        self.max_attempts = int(max_attempts)
+        self.preempt = bool(preempt)
+        self.tenants: dict[str, TenantState] = {}
+        self.active: dict[int, tuple[Request, Ticket]] = {}  # by rid
+        self._rid_of_tid: dict[int, int] = {}
+        self._rid = itertools.count()
+
+    # -- registration / submission ------------------------------------------
+
+    def register_tenant(
+        self, name: str, *, weight: float = 1.0,
+        budget: Optional[float] = None,
+    ) -> TenantConfig:
+        if name in self.tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        cfg = TenantConfig(name, weight=weight, budget=budget)
+        self.tenants[name] = TenantState(cfg)
+        return cfg
+
+    @staticmethod
+    def _enqueue(queue: collections.deque, r: Request, *,
+                 front_of_class: bool = False) -> None:
+        """Class-major insertion: higher classes drain first, FIFO within a
+        class.  ``front_of_class`` re-inserts ahead of the request's own
+        class band (preempted/displaced work resumes before new arrivals of
+        its class)."""
+        if front_of_class:
+            i = next((i for i, x in enumerate(queue) if x.klass <= r.klass),
+                     len(queue))
+        else:
+            i = next((i for i, x in enumerate(queue) if x.klass < r.klass),
+                     len(queue))
+        queue.insert(i, r)
+
+    def submit(self, tenant: str, df: DataflowPath, *, klass: int = 0) -> int:
+        """Queue a request; returns its rid.  Nothing is placed until
+        :meth:`pump` drains the queues under the fairness policy."""
+        st = self.tenants[tenant]  # KeyError for unregistered: caller bug
+        r = Request(next(self._rid), tenant, df, klass=klass)
+        self._enqueue(st.queue, r)
+        st.submitted += 1
+        return r.rid
+
+    # -- live accounting -----------------------------------------------------
+
+    def committed_capacity(self) -> dict[str, float]:
+        """Live committed compute per tenant (from the active tickets, the
+        ground truth — never a counter that could drift)."""
+        held = {t: 0.0 for t in self.tenants}
+        for req, _ in self.active.values():
+            held[req.tenant] += req.creq_sum
+        return held
+
+    def queued_demand(self) -> dict[str, float]:
+        return {
+            t: sum(r.creq_sum for r in st.queue)
+            for t, st in self.tenants.items()
+        }
+
+    def rid_of(self, ticket: Ticket) -> Optional[int]:
+        """The request id an admitted ticket belongs to (stable across
+        re-mapping and defrag, which preserve tids)."""
+        return self._rid_of_tid.get(ticket.tid)
+
+    def conservation(self) -> dict[str, int]:
+        """The ticket ledger; ``ok`` iff every submitted request is in
+        exactly one terminal/live state."""
+        queued = sum(len(st.queue) for st in self.tenants.values())
+        released = sum(st.released for st in self.tenants.values())
+        dropped = sum(st.dropped for st in self.tenants.values())
+        submitted = sum(st.submitted for st in self.tenants.values())
+        return {
+            "submitted": submitted,
+            "queued": queued,
+            "active": len(self.active),
+            "released": released,
+            "dropped": dropped,
+            "ok": submitted == queued + len(self.active) + released + dropped,
+        }
+
+    # -- admission -----------------------------------------------------------
+
+    def _activate(self, req: Request, ticket: Ticket) -> None:
+        self.active[req.rid] = (req, ticket)
+        self._rid_of_tid[ticket.tid] = req.rid
+        self.tenants[req.tenant].admitted += 1
+
+    def _deactivate(self, rid: int) -> tuple[Request, Ticket]:
+        req, ticket = self.active.pop(rid)
+        self._rid_of_tid.pop(ticket.tid, None)
+        return req, ticket
+
+    def _requeue(self, req: Request, *, front: bool = True) -> None:
+        self._enqueue(self.tenants[req.tenant].queue, req,
+                      front_of_class=front)
+
+    def _drop(self, req: Request) -> None:
+        self.tenants[req.tenant].dropped += 1
+
+    def _try_preempt(self, req: Request) -> Optional[Ticket]:
+        """Attempt class-ordered preemptive admission for ``req``; on
+        success, every displaced victim re-enters its tenant queue at the
+        front of its class band (accounted, never dropped)."""
+        if not self.preempt or not any(
+            may_preempt(t.klass, req.klass)
+            for t in self.placer.tickets.values()
+        ):
+            return None
+        ticket, victims = self.placer.admit_preempting(
+            req.df, tenant=req.tenant, klass=req.klass
+        )
+        if ticket is None:
+            return None
+        for v in victims:
+            vrid = self._rid_of_tid.get(v.tid)
+            if vrid is not None:
+                vreq, _ = self._deactivate(vrid)
+                vreq.attempts = 0
+                self.tenants[vreq.tenant].preempted += 1
+                self._requeue(vreq, front=True)
+        self._activate(req, ticket)
+        return ticket
+
+    def _handle_reject(self, req: Request) -> Optional[Ticket]:
+        """A drained request the placer could not fit: try class preemption,
+        else retry later (bounded) or drop."""
+        req.attempts += 1
+        ticket = self._try_preempt(req)
+        if ticket is not None:
+            return ticket
+        if req.attempts >= self.max_attempts:
+            self._drop(req)
+        else:
+            self._requeue(req, front=True)
+        return None
+
+    def pump(self, *, rounds: int = 1) -> list[Ticket]:
+        """Drain the tenant queues under the fairness policy.
+
+        Each round selects up to ``micro_batch`` eligible queue heads
+        (weighted max-min over live committed compute), pops them, and
+        admits them as ONE ``admit_many`` micro-batch — the batched kernel
+        serves the whole drain.  Rejections go through preemption /
+        retry / drop handling.  Returns the tickets admitted.
+        """
+        admitted: list[Ticket] = []
+        cfgs = {t: st.cfg for t, st in self.tenants.items()}
+        for _ in range(rounds):
+            queues = {t: st.queue for t, st in self.tenants.items()}
+            picked = self.policy.select(
+                cfgs, queues, self.committed_capacity(), self.micro_batch
+            )
+            if not picked:
+                break
+            for r in picked:  # selection reads per-tenant heads in order
+                q = self.tenants[r.tenant].queue
+                assert q[0] is r, "policy must select queue heads in order"
+                q.popleft()
+            tickets = self.placer.admit_many(
+                [r.df for r in picked],
+                metas=[(r.tenant, r.klass) for r in picked],
+            )
+            for r, t in zip(picked, tickets):
+                if t is not None:
+                    self._activate(r, t)
+                    admitted.append(t)
+                else:
+                    t2 = self._handle_reject(r)
+                    if t2 is not None:
+                        admitted.append(t2)
+        # a later preemption in the same pump may have displaced an earlier
+        # admission: hand back only handles that are still live
+        return [t for t in admitted if self.placer.tickets.get(t.tid) is t]
+
+    # -- release / churn ------------------------------------------------------
+
+    def release(self, rid: int) -> None:
+        req, ticket = self._deactivate(rid)
+        self.placer.release(ticket)
+        self.tenants[req.tenant].released += 1
+
+    def _reconcile_churn(
+        self, remapped: list[Ticket], dropped: list[Ticket]
+    ) -> tuple[list[Ticket], list[Ticket]]:
+        """After ``fail_*``: remapped tickets kept their tid (update the
+        handle); dropped ones re-enter their tenant queue — displacement by
+        the environment is handled exactly like preemption, and a dropped
+        high-class request may immediately preempt lower-class survivors
+        (which are requeued in turn).  Returns ``(alive, requeued)``:
+        every ticket still active after reconciliation — in-place remaps
+        (tid preserved) plus preemptive rescues (new tid) — and the old
+        tickets of requests that went back to a queue, so a caller can
+        attach lifecycle (departure timers) to exactly the live set."""
+        for nt in remapped:
+            rid = self._rid_of_tid.get(nt.tid)
+            if rid is not None:
+                req, _ = self.active[rid]
+                self.active[rid] = (req, nt)
+        rescued: list[Ticket] = []
+        requeued: list[Ticket] = []
+        for old in dropped:
+            rid = self._rid_of_tid.get(old.tid)
+            if rid is None:
+                continue
+            req, _ = self._deactivate(rid)
+            req.attempts = 0
+            self.tenants[req.tenant].preempted += 1
+            t = self._try_preempt(req)
+            if t is None:
+                self._requeue(req, front=True)
+                requeued.append(old)
+            else:
+                rescued.append(t)
+        alive = [
+            t for t in remapped + rescued
+            if self.placer.tickets.get(t.tid) is t  # rescue may preempt one
+        ]
+        return alive, requeued
+
+    def fail_node(self, v: int) -> tuple[list[Ticket], list[Ticket]]:
+        """Take node ``v`` down.  Returns ``(alive, requeued)``: the
+        tickets still active after re-mapping and preemptive rescue, and
+        the old tickets of displaced requests now waiting in their tenant
+        queues (see :meth:`_reconcile_churn`)."""
+        return self._reconcile_churn(*self.placer.fail_node(v))
+
+    def fail_link(self, u: int, v: int) -> tuple[list[Ticket], list[Ticket]]:
+        """Take the (symmetric) link down; same contract as
+        :meth:`fail_node`."""
+        return self._reconcile_churn(*self.placer.fail_link(u, v))
+
+    def restore_node(self, v: int) -> None:
+        self.placer.restore_node(v)
+
+    def restore_link(self, u: int, v: int) -> None:
+        self.placer.restore_link(u, v)
+
+    # -- defragmentation ------------------------------------------------------
+
+    def _fair_queue_heads(self, limit: Optional[int]) -> list[Request]:
+        """Queued requests in defrag retry order: class-major, then the
+        water-filling drain order (most under-served tenant first), FIFO
+        within a tenant.  Tenant budgets stay hard caps: requests that
+        would push a tenant past its budget are left queued."""
+        held = self.committed_capacity()
+        order: list[Request] = []
+        heads = {
+            t: list(st.queue) for t, st in self.tenants.items() if st.queue
+        }
+        virt = dict(held)
+        while heads:
+            t = min(
+                heads,
+                key=lambda t: (virt[t] / self.tenants[t].cfg.weight, t),
+            )
+            r = heads[t].pop(0)
+            if not heads[t]:
+                del heads[t]
+            budget = self.tenants[t].cfg.budget
+            if budget is not None and virt[t] + r.creq_sum > budget + 1e-9:
+                continue
+            virt[t] += r.creq_sum
+            order.append(r)
+        order.sort(key=lambda r: -r.klass)  # stable: keeps fair order per class
+        if limit is not None:
+            order = order[:limit]
+        return order
+
+    def defrag(self, *, max_extras: Optional[int] = None) -> defrag_mod.DefragResult:
+        """Global re-optimization of the standing set (``service.defrag``),
+        retrying queued requests on the re-packed network.  Atomic: on a
+        non-improving pass nothing changes."""
+        extras = self._fair_queue_heads(max_extras)
+        result = defrag_mod.defrag(
+            self.placer,
+            extras=[(r.df, (r.tenant, r.klass)) for r in extras],
+        )
+        if result.committed:
+            # standing tickets were re-placed under their old tids: refresh
+            # the handles the active table holds
+            for rid, (req, ticket) in list(self.active.items()):
+                self.active[rid] = (req, self.placer.tickets[ticket.tid])
+            for i, ticket in result.readmitted:
+                req = extras[i]
+                self.tenants[req.tenant].queue.remove(req)
+                self._activate(req, ticket)
+        return result
+
+    # -- reporting -----------------------------------------------------------
+
+    def engine_stats(self) -> engine.Stats:
+        """The service-level story in the engine's unified Stats vocabulary
+        (preemptions / defrag rounds next to solver wall-clock)."""
+        st = self.placer.stats
+        s = engine.Stats(method=self.placer.method)
+        s.preemptions = st.preempted
+        s.defrag_rounds = st.defrag_rounds
+        s.solve_ms = st.solve_ms
+        s.batch_size = self.micro_batch
+        return s
+
+    def fairness_report(self) -> dict:
+        """Actual standing shares vs weighted max-min targets.
+
+        Shares are taken over the *observed* committed total (the network
+        decides what fits; the policy only divides it), and targets come
+        from :func:`policy.maxmin_shares` with each tenant's demand =
+        committed + queued — a tenant demanding less than its share keeps
+        only its demand, the rest is redistributed by weight.
+        """
+        from .policy import maxmin_shares
+
+        held = self.committed_capacity()
+        queued = self.queued_demand()
+        total = sum(held.values())
+        demands = {t: held[t] + queued[t] for t in self.tenants}
+        weights = {t: st.cfg.weight for t, st in self.tenants.items()}
+        target = maxmin_shares(demands, weights, total)
+        deviation = {
+            t: abs(held[t] - target[t]) / target[t]
+            for t in self.tenants
+            if target[t] > 1e-9
+        }
+        return {
+            "committed": held,
+            "queued_demand": queued,
+            "total_committed": total,
+            "target_shares": target,
+            "deviation": deviation,
+            "max_deviation": max(deviation.values(), default=0.0),
+        }
+
+    def check_invariants(self) -> None:
+        """Placer conservation + the control-plane ledger."""
+        self.placer.check_invariants()
+        ledger = self.conservation()
+        assert ledger["ok"], f"ticket conservation violated: {ledger}"
+        # every active rid's ticket is registered in the placer under its tid
+        for rid, (req, ticket) in self.active.items():
+            assert self.placer.tickets.get(ticket.tid) is ticket, (
+                f"active rid {rid} holds a stale ticket"
+            )

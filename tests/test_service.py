@@ -1,0 +1,456 @@
+"""Control-plane service layer: weighted max-min fair admission, preemption
+classes, background defragmentation, and conservation invariants under
+adversarial interleavings (seeded fuzz)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DataflowPath,
+    OnlinePlacer,
+    ResourceGraph,
+    random_dataflow,
+    waxman,
+)
+from repro.core.engine import Stats, _unify
+from repro.service import (
+    CLASS_BEST_EFFORT,
+    CLASS_CRITICAL,
+    ControlPlane,
+    FairSharePolicy,
+    defrag,
+    global_objective,
+    maxmin_shares,
+    may_preempt,
+)
+
+PYM = dict(method="leastcost_python")  # pure-python backend: fast, no jit
+
+
+def _line_rg(mid_cap: float = 4.0, bw: float = 50.0) -> ResourceGraph:
+    """0 -- 1 -- 2 with all compute capacity on node 1."""
+    return ResourceGraph.from_edge_list(
+        [0.0, mid_cap, 0.0], [(0, 1, bw, 1.0), (1, 2, bw, 1.0)]
+    )
+
+
+def _unit_df(creq: float = 0.5, breq: float = 1.0) -> DataflowPath:
+    return DataflowPath.make([0.0, creq, 0.0], [breq, breq], src=0, dst=2)
+
+
+# ---------------------------------------------------------------------------
+# policy: weighted max-min water-filling
+# ---------------------------------------------------------------------------
+
+
+def test_maxmin_shares_waterfilling():
+    # both saturated: pure weight split
+    assert maxmin_shares({"a": 10, "b": 10}, {"a": 3, "b": 1}, 8) == {
+        "a": 6.0, "b": 2.0,
+    }
+    # a demands less than its share: surplus redistributes to b
+    s = maxmin_shares({"a": 1, "b": 10}, {"a": 3, "b": 1}, 8)
+    assert s["a"] == 1 and s["b"] == pytest.approx(7.0)
+    # capacity exceeds total demand: everyone fully satisfied
+    s = maxmin_shares({"a": 2, "b": 3}, {"a": 1, "b": 1}, 100)
+    assert s == {"a": 2, "b": 3}
+    # zero-demand tenant gets nothing, three-way redistribution
+    s = maxmin_shares({"a": 0, "b": 5, "c": 50}, {"a": 1, "b": 1, "c": 1}, 12)
+    assert s["a"] == 0 and s["b"] == pytest.approx(5) and s["c"] == pytest.approx(7)
+    # shares never exceed capacity
+    assert sum(s.values()) <= 12 + 1e-9
+
+
+def test_may_preempt_strict_order():
+    assert may_preempt(0, 1) and may_preempt(1, 2)
+    assert not may_preempt(1, 1) and not may_preempt(2, 1)
+
+
+# ---------------------------------------------------------------------------
+# fair admission
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_drain_converges_to_weight_shares():
+    """Two saturated tenants, weights 3:1, identical unit requests on a
+    single bottleneck node: standing committed capacity must split 3:1."""
+    cp = ControlPlane(_line_rg(mid_cap=4.0), micro_batch=8,
+                      policy=FairSharePolicy(slack=0.5), **PYM)
+    cp.register_tenant("a", weight=3.0)
+    cp.register_tenant("b", weight=1.0)
+    for _ in range(16):
+        cp.submit("a", _unit_df())
+        cp.submit("b", _unit_df())
+    for _ in range(4):
+        cp.pump()
+        cp.check_invariants()
+    held = cp.committed_capacity()
+    assert held["a"] == pytest.approx(3.0, abs=0.51)
+    assert held["b"] == pytest.approx(1.0, abs=0.51)
+    assert held["a"] + held["b"] == pytest.approx(4.0, abs=1e-6)
+    rep = cp.fairness_report()
+    assert rep["max_deviation"] <= 0.20
+
+
+def test_fcfs_baseline_ignores_weights():
+    """Same scenario through the bare placer (FCFS): the interleaved
+    arrival order splits capacity ~1:1, not 3:1 — the contrast the control
+    plane exists to fix."""
+    placer = OnlinePlacer(_line_rg(mid_cap=4.0), **PYM)
+    held = {"a": 0.0, "b": 0.0}
+    for _ in range(16):
+        for tenant in ("a", "b"):
+            t = placer.admit(_unit_df(), tenant=tenant)
+            if t is not None:
+                held[tenant] += 0.5
+    assert held["a"] == pytest.approx(held["b"], abs=0.51)
+
+
+def test_budget_caps_committed_capacity():
+    cp = ControlPlane(_line_rg(mid_cap=4.0), micro_batch=8, **PYM)
+    cp.register_tenant("a", weight=1.0, budget=1.0)
+    for _ in range(8):
+        cp.submit("a", _unit_df())
+    cp.pump(rounds=4)
+    cp.check_invariants()
+    assert cp.committed_capacity()["a"] <= 1.0 + 1e-9
+    assert cp.conservation()["queued"] >= 6  # the rest waits, not dropped
+    # the defrag retry path honors the budget too
+    res = cp.defrag()
+    cp.check_invariants()
+    assert cp.committed_capacity()["a"] <= 1.0 + 1e-9
+    assert len(res.readmitted) == 0
+
+
+def test_pump_uses_micro_batches():
+    cp = ControlPlane(waxman(16, seed=2), micro_batch=4, **PYM)
+    cp.register_tenant("a")
+    rg = cp.placer.base
+    for i in range(8):
+        cp.submit("a", random_dataflow(rg, 4, seed=50 + i,
+                                       creq_range=(0.02, 0.1),
+                                       breq_range=(0.5, 2.0)))
+    cp.pump(rounds=2)
+    assert cp.placer.stats.batches == 2  # two admit_many micro-batches
+    cp.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# preemption classes
+# ---------------------------------------------------------------------------
+
+
+def _fill_with_best_effort(cp, k=8):
+    for _ in range(k):
+        cp.submit("lo", _unit_df(), klass=CLASS_BEST_EFFORT)
+    cp.pump(rounds=2)
+
+
+def test_preemption_displaces_strictly_lower_class():
+    cp = ControlPlane(_line_rg(mid_cap=4.0), micro_batch=8, **PYM)
+    cp.register_tenant("lo")
+    cp.register_tenant("hi")
+    _fill_with_best_effort(cp)
+    assert cp.committed_capacity()["lo"] == pytest.approx(4.0)
+
+    cp.submit("hi", _unit_df(), klass=CLASS_CRITICAL)
+    admitted = cp.pump()
+    cp.check_invariants()
+    assert len(admitted) == 1 and admitted[0].klass == CLASS_CRITICAL
+    assert cp.placer.stats.preempted == 1
+    assert cp.tenants["lo"].preempted == 1
+    # the preempted request re-entered its tenant queue, not the void
+    ledger = cp.conservation()
+    assert ledger["ok"] and ledger["dropped"] == 0
+    # every surviving best-effort ticket was left alone except the victim
+    assert cp.committed_capacity()["lo"] == pytest.approx(3.5)
+
+
+def test_equal_class_never_preempts():
+    cp = ControlPlane(_line_rg(mid_cap=4.0), micro_batch=8, max_attempts=2,
+                      **PYM)
+    cp.register_tenant("lo")
+    cp.register_tenant("hi")
+    _fill_with_best_effort(cp)
+    cp.submit("hi", _unit_df(), klass=CLASS_BEST_EFFORT)  # same class
+    assert cp.pump(rounds=2) == []
+    cp.check_invariants()
+    assert cp.placer.stats.preempted == 0
+    assert cp.committed_capacity()["lo"] == pytest.approx(4.0)
+
+
+def test_preemption_rolls_back_when_it_cannot_help():
+    """A request too big for the *base* network must not destroy standing
+    capacity on a failed probe: conservative preemption restores
+    everything."""
+    placer = OnlinePlacer(_line_rg(mid_cap=4.0), **PYM)
+    for _ in range(8):
+        assert placer.admit(_unit_df(), tenant="lo", klass=0) is not None
+    cap0, bw0 = placer.cap.copy(), placer.bw.copy()
+    tids0 = set(placer.tickets)
+
+    big = DataflowPath.make([0.0, 10.0, 0.0], [1.0, 1.0], src=0, dst=2)
+    t, victims = placer.admit_preempting(big, klass=5, max_preempt=8)
+    assert t is None and victims == []
+    np.testing.assert_array_equal(placer.cap, cap0)
+    np.testing.assert_array_equal(placer.bw, bw0)
+    assert set(placer.tickets) == tids0
+    assert placer.stats.preempted == 0
+    placer.check_invariants()
+
+
+def test_remap_prefers_higher_class_after_failure():
+    """Degraded network fits one of two displaced tickets: the higher class
+    survives, the lower is dropped (class-major re-admission order)."""
+    # both tickets share node 1 (cap 2); the backup node 2 (cap 1) can hold
+    # only one of them after node 1 fails
+    rg = ResourceGraph.from_edge_list(
+        [0.0, 2.0, 1.0, 0.0],
+        [(0, 1, 50.0, 1.0), (1, 3, 50.0, 1.0),
+         (0, 2, 50.0, 5.0), (2, 3, 50.0, 5.0)],
+    )
+    df = DataflowPath.make([0.0, 1.0, 0.0], [1.0, 1.0], src=0, dst=3)
+    placer = OnlinePlacer(rg, **PYM)
+    lo = placer.admit(df, tenant="lo", klass=0)
+    hi = placer.admit(df, tenant="hi", klass=2)
+    assert lo.mapping.assign[1] == 1 and hi.mapping.assign[1] == 1
+    remapped, dropped = placer.fail_node(1)  # both displaced; node 2 fits 1
+    assert [t.klass for t in remapped] == [2]  # high class won the backup
+    assert [t.klass for t in dropped] == [0]
+    # the remapped ticket kept its tid (external handles survive)
+    assert remapped[0].tid == hi.tid
+    placer.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# defragmentation
+# ---------------------------------------------------------------------------
+
+
+def _two_route_rg():
+    """0->3 via node 1 (cost 2) or node 2 (cost 10), one unit of compute
+    capacity on each."""
+    return ResourceGraph.from_edge_list(
+        [0.0, 1.0, 1.0, 0.0],
+        [(0, 1, 50.0, 1.0), (1, 3, 50.0, 1.0),
+         (0, 2, 50.0, 5.0), (2, 3, 50.0, 5.0)],
+    )
+
+
+def test_defrag_recovers_churn_fragmentation_and_readmits():
+    rg = _two_route_rg()
+    df = DataflowPath.make([0.0, 1.0, 0.0], [1.0, 1.0], src=0, dst=3)
+    placer = OnlinePlacer(rg, **PYM)
+    t = placer.admit(df, tenant="a")
+    assert t.mapping.assign[1] == 1  # the cheap route
+    placer.fail_node(1)  # greedy re-map squeezes it onto node 2
+    placer.restore_node(1)  # node 1 back, standing allocation ignores it
+    frag = next(iter(placer.tickets.values()))
+    assert frag.mapping.assign[1] == 2 and frag.tid == t.tid
+
+    extra = DataflowPath.make([0.0, 1.0, 0.0], [1.0, 1.0], src=0, dst=3)
+    before = global_objective(placer)
+    res = defrag(placer, extras=[(extra, ("b", 0))])
+    placer.check_invariants()
+    assert res.committed and res.repacked
+    assert res.objective_after > res.objective_before == before
+    assert res.moved == 1  # the fragmented ticket moved back to node 1
+    assert len(res.readmitted) == 1  # the extra fits on the freed node 2
+    assert placer.tickets[t.tid].mapping.assign[1] == 1  # tid survived
+    assert placer.stats.defrag_rounds == 1 and placer.stats.defrag_commits == 1
+
+
+def test_defrag_is_a_noop_on_an_optimal_allocation():
+    rg = _two_route_rg()
+    df = DataflowPath.make([0.0, 1.0, 0.0], [1.0, 1.0], src=0, dst=3)
+    placer = OnlinePlacer(rg, **PYM)
+    t = placer.admit(df, tenant="a")
+    cap0, bw0 = placer.cap.copy(), placer.bw.copy()
+    stats_admitted = placer.stats.admitted
+    res = defrag(placer)
+    placer.check_invariants()
+    assert not res.committed and not res.repacked
+    assert res.objective_after == res.objective_before
+    np.testing.assert_array_equal(placer.cap, cap0)
+    np.testing.assert_array_equal(placer.bw, bw0)
+    assert placer.tickets[t.tid] is t  # the very same ticket object
+    assert placer.stats.admitted == stats_admitted  # no stats churn
+    assert placer.stats.defrag_rounds == 1 and placer.stats.defrag_commits == 0
+
+
+def test_defrag_fallback_readmits_when_repack_is_infeasible():
+    """Greedy class-major re-pack can corner itself (an early ticket grabs
+    the bandwidth a later one needs).  The pass must then restore the
+    standing state bit-for-bit and still retry the extras on the current
+    residual."""
+    rg = ResourceGraph.from_edge_list(
+        [0.0, 1.0, 0.5, 0.0],
+        [(0, 1, 10.0, 1.0), (1, 3, 10.0, 1.0),
+         (0, 2, 10.0, 5.0), (2, 3, 10.0, 5.0)],
+    )
+    a = DataflowPath.make([0.0, 0.5, 0.0], [8.0, 8.0], src=0, dst=3)
+    b = DataflowPath.make([0.0, 1.0, 0.0], [8.0, 8.0], src=0, dst=3)
+    placer = OnlinePlacer(rg, **PYM)
+    ta = placer.admit(a, tenant="a")  # tid 0, short route via node 1
+    placer.fail_node(1)  # A displaced onto the detour (node 2)
+    placer.restore_node(1)
+    tb = placer.admit(b, tenant="b")  # tid 1+, takes the freed short route
+    assert placer.tickets[ta.tid].mapping.assign[1] == 2
+    assert tb.mapping.assign[1] == 1
+    # re-pack order (by tid) sends A back to node 1 first, after which B
+    # fits nowhere (node 1 out of capacity, node 2 too small) -> rollback
+    extra = DataflowPath.make([0.0, 0.0, 0.0], [1.0, 1.0], src=0, dst=3)
+    res = defrag(placer, extras=[(extra, ("c", 0))])
+    placer.check_invariants()
+    assert res.committed and not res.repacked
+    assert len(res.readmitted) == 1
+    assert res.objective_after > res.objective_before
+    # standing placement untouched by the failed re-pack
+    assert placer.tickets[ta.tid].mapping.assign[1] == 2
+    assert placer.tickets[tb.tid].mapping.assign[1] == 1
+
+
+def test_controlplane_defrag_refreshes_handles_and_queue():
+    # node 1 (cheap) holds 1.0, node 2 (expensive) holds 2.0.  X (creq 1)
+    # gets churned onto node 2; the big request Y (creq 2) then fits
+    # nowhere greedily — node 2 has only 1.0 free — until defrag moves X
+    # back to node 1.
+    rg = ResourceGraph.from_edge_list(
+        [0.0, 1.0, 2.0, 0.0],
+        [(0, 1, 50.0, 1.0), (1, 3, 50.0, 1.0),
+         (0, 2, 50.0, 5.0), (2, 3, 50.0, 5.0)],
+    )
+    cp = ControlPlane(rg, micro_batch=4, max_attempts=10, **PYM)
+    cp.register_tenant("a")
+    x = DataflowPath.make([0.0, 1.0, 0.0], [1.0, 1.0], src=0, dst=3)
+    y = DataflowPath.make([0.0, 2.0, 0.0], [1.0, 1.0], src=0, dst=3)
+    cp.submit("a", x)
+    cp.pump()
+    cp.fail_node(1)  # X squeezed onto node 2
+    cp.restore_node(1)
+    cp.submit("a", y)
+    cp.pump()  # Y cannot fit around the fragmented X
+    assert cp.conservation()["queued"] == 1
+    res = cp.defrag()
+    cp.check_invariants()
+    assert res.committed and len(res.readmitted) == 1
+    assert cp.conservation()["queued"] == 0 and len(cp.active) == 2
+
+
+# ---------------------------------------------------------------------------
+# ticket immutability (satellite: frozen dataclass held mutable dicts)
+# ---------------------------------------------------------------------------
+
+
+def test_ticket_loads_are_immutable_views():
+    placer = OnlinePlacer(_line_rg(), **PYM)
+    t = placer.admit(_unit_df())
+    assert t is not None
+    with pytest.raises(TypeError):
+        t.node_load[1] = 99.0
+    with pytest.raises(TypeError):
+        t.edge_load[(0, 1)] = 99.0
+    placer.check_invariants()
+
+
+def test_ticket_defensively_copies_constructor_dicts():
+    from repro.core.online import Ticket
+    from repro.core.graph import Mapping
+
+    node_load, edge_load = {1: 0.5}, {(0, 1): 1.0}
+    t = Ticket(0, _unit_df(), Mapping((0, 1, 2), (0, 1, 2), 2.0),
+               node_load, edge_load)
+    node_load[1] = 999.0  # caller mutates its own dict afterwards
+    edge_load[(0, 1)] = 999.0
+    assert t.node_load[1] == 0.5 and t.edge_load[(0, 1)] == 1.0
+
+
+def test_engine_stats_surface_service_counters():
+    native = type("S", (), {"preempted": 3, "defrag_rounds": 2})()
+    s = _unify(native, "leastcost_python")
+    assert s.preemptions == 3 and s.defrag_rounds == 2
+    assert Stats().preemptions == 0 and Stats().defrag_rounds == 0
+
+    cp = ControlPlane(_line_rg(), micro_batch=8, **PYM)
+    cp.register_tenant("lo")
+    cp.register_tenant("hi")
+    _fill_with_best_effort(cp)
+    cp.submit("hi", _unit_df(), klass=CLASS_CRITICAL)
+    cp.pump()
+    es = cp.engine_stats()
+    assert es.preemptions == 1 and es.method == "leastcost_python"
+
+
+# ---------------------------------------------------------------------------
+# seeded fuzz: adversarial interleavings preserve every invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_interleavings_conserve_tickets_and_capacity(seed):
+    rng = np.random.default_rng(seed)
+    rg = waxman(12, seed=4)
+    cp = ControlPlane(rg, micro_batch=6, max_attempts=3,
+                      policy=FairSharePolicy(slack=0.4), **PYM)
+    cp.register_tenant("a", weight=3.0)
+    cp.register_tenant("b", weight=1.0)
+    cp.register_tenant("c", weight=2.0, budget=1.5)
+    tenants = ["a", "b", "c"]
+    failed_nodes: list[int] = []
+    failed_links: list[tuple[int, int]] = []
+    edges = list(rg.edges())
+
+    for step in range(70):
+        op = rng.choice(
+            ["submit", "pump", "release", "fail_node", "restore_node",
+             "fail_link", "restore_link", "defrag"],
+            p=[0.30, 0.25, 0.12, 0.08, 0.08, 0.05, 0.05, 0.07],
+        )
+        if op == "submit":
+            df = random_dataflow(rg, 4, seed=1000 * seed + step,
+                                 creq_range=(0.05, 0.3),
+                                 breq_range=(0.5, 3.0))
+            cp.submit(str(rng.choice(tenants)), df,
+                      klass=int(rng.integers(0, 3)))
+        elif op == "pump":
+            cp.pump(rounds=int(rng.integers(1, 3)))
+        elif op == "release" and cp.active:
+            cp.release(int(rng.choice(list(cp.active))))
+        elif op == "fail_node" and len(failed_nodes) < 3:
+            v = int(rng.integers(0, rg.n))
+            if v not in failed_nodes:
+                alive, _ = cp.fail_node(v)
+                # the returned handles are all live (incl. rescues)
+                assert all(
+                    cp.placer.tickets.get(t.tid) is t for t in alive
+                )
+                failed_nodes.append(v)
+        elif op == "restore_node" and failed_nodes:
+            cp.restore_node(failed_nodes.pop(
+                int(rng.integers(0, len(failed_nodes)))))
+        elif op == "fail_link" and len(failed_links) < 2:
+            u, v = edges[int(rng.integers(0, len(edges)))]
+            alive, _ = cp.fail_link(u, v)
+            assert all(cp.placer.tickets.get(t.tid) is t for t in alive)
+            failed_links.append((u, v))
+        elif op == "restore_link" and failed_links:
+            cp.restore_link(*failed_links.pop(
+                int(rng.integers(0, len(failed_links)))))
+        elif op == "defrag":
+            res = cp.defrag()
+            # defrag never regresses the objective
+            assert res.objective_after >= res.objective_before
+        # EVERY step: capacity conservation + the ticket ledger
+        cp.check_invariants()
+
+    # end state: the ledger adds up and nothing was silently lost
+    ledger = cp.conservation()
+    assert ledger["ok"]
+    assert ledger["submitted"] == (
+        ledger["queued"] + ledger["active"] + ledger["released"]
+        + ledger["dropped"]
+    )
+    # every preemption the placer performed reached a tenant ledger (the
+    # tenant counter additionally includes displacement-by-failure)
+    assert sum(st.preempted for st in cp.tenants.values()) >= (
+        cp.placer.stats.preempted
+    )
