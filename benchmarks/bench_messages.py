@@ -6,14 +6,25 @@ Event-driven simulator (core/simulator.py) on Waxman topologies; plus the
 BSP shard_map engine's async-equivalent message count for comparison.  All
 solves go through the unified mapper engine (``repro.core.engine.solve``);
 message counts come from the unified ``Stats``.
+
+:func:`run_regional` extends the message story to the *control plane*
+(``repro.service.regions``): it sweeps the regional plane over (R, fanout)
+on a tenant-skewed overload workload, recording weighted fair-share
+deviation, admission quality, per-round coordination messages (gossip +
+2PC) and gossip staleness against the centralized PR-3 plane.
+``python -m benchmarks.bench_messages --smoke`` writes the sweep +
+acceptance criteria to ``BENCH_messages.json`` (CI artifact).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 
-from repro.core import SimConfig, pathmap_exact, random_dataflow, solve, waxman
+from repro.core import (
+    DataflowPath, SimConfig, pathmap_exact, random_dataflow, solve, waxman,
+)
 
 
 def run(n_instances: int = 25, n: int = 20, p: int = 6, seed0: int = 100,
@@ -87,3 +98,175 @@ def _run_one(n_instances, n, p, seed0):
         ),
     })
     return rows
+
+
+# ---------------------------------------------------------------------------
+# regional control plane: coordination messages vs fairness/admission
+# ---------------------------------------------------------------------------
+
+
+def _skewed_workload(rg, assign, n_per_tenant, p, seed):
+    """Per-tenant request lists on one fixed partition: ``gold`` (weight 3)
+    spreads uniformly over the whole network, ``bronze`` (weight 1) is
+    concentrated in region 0 — the case where *local* per-region fairness
+    is blind (each region only ever sees part of gold's global holdings)
+    and gossiped estimates have to carry the signal."""
+    rng = np.random.default_rng(seed)
+    region0 = np.nonzero(assign == 0)[0]
+    reqs = {"gold": [], "bronze": []}
+
+    def _df(nodes):
+        src, dst = rng.choice(nodes, size=2, replace=False)
+        creq = rng.uniform(0.05, 0.25, size=p).astype(np.float32)
+        creq[0] = creq[-1] = 0.0
+        breq = rng.uniform(0.5, 2.0, size=p - 1).astype(np.float32)
+        return DataflowPath(creq, breq, int(src), int(dst))
+
+    for _ in range(n_per_tenant):
+        reqs["gold"].append(_df(np.arange(rg.n)))
+        reqs["bronze"].append(_df(region0))
+    return reqs
+
+
+def _drive_plane(cp, reqs, pumps):
+    for i in range(max(len(reqs["gold"]), len(reqs["bronze"]))):
+        for t in ("gold", "bronze"):
+            if i < len(reqs[t]):
+                cp.submit(t, reqs[t][i])
+    for _ in range(pumps):
+        cp.pump()
+    cp.check_invariants()
+    held = cp.committed_capacity()
+    total = sum(held.values()) or 1.0
+    frac = {"gold": 0.75, "bronze": 0.25}  # weights 3:1, both saturated
+    dev = {
+        t: abs(held[t] / total - frac[t]) / frac[t] for t in held
+    }
+    led = cp.conservation()
+    return {
+        "committed": {t: float(v) for t, v in held.items()},
+        "actual_fractions": {t: float(held[t] / total) for t in held},
+        "target_fractions": frac,
+        "deviation": {t: float(d) for t, d in dev.items()},
+        "max_deviation": float(max(dev.values())),
+        "admitted_fraction": led["active"] / max(led["submitted"], 1),
+        "ledger": led,
+    }
+
+
+def run_regional(
+    n: int = 24,
+    p: int = 4,
+    n_per_tenant: int = 60,
+    pumps: int = 10,
+    sweep=((1, 2), (2, 2), (4, 0), (4, 1), (4, 2)),
+    R_max: int = 4,
+    seed: int = 7,
+    method: str = "leastcost_python",
+    out_path: str | None = "BENCH_messages.json",
+):
+    """Regional-plane sweep over (R, fanout) vs the centralized plane.
+
+    Both planes serve the identical tenant-skewed overload workload
+    (weights 3:1).  Recorded per point: weighted fair-share deviation of
+    the standing allocation, admitted fraction, coordination messages per
+    pump round (gossip exactly ``R * fanout`` + bounded 2PC) and gossip
+    staleness.  Criteria (the PR acceptance gates):
+
+    - at R=4 with the default fanout the weighted fair-share deviation
+      stays within 15 percentage-of-target points of the centralized
+      plane's;
+    - per-round gossip messages are exactly ``R * fanout`` — O(R*fanout),
+      not O(n^2);
+    - R=1 bit-identity with the centralized plane is enforced separately
+      in ``tests/test_regions.py`` (noted here for the record).
+    """
+    from repro.service import (
+        ControlPlane, FairSharePolicy, RegionalControlPlane,
+        partition_regions,
+    )
+
+    rg = waxman(n, seed=seed)
+    assign = partition_regions(rg, R_max, seed=seed)
+    reqs = _skewed_workload(rg, assign, n_per_tenant, p, seed)
+    kw = dict(policy=FairSharePolicy(slack=0.4), micro_batch=16,
+              method=method)
+
+    def _fresh(regions=None, fanout=None):
+        if regions is None:
+            return ControlPlane(rg, **kw)
+        # regional machinery even at R=1 (the facade would degrade it to
+        # the centralized plane — here the degenerate case is the point)
+        return RegionalControlPlane(rg, regions=regions, fanout=fanout,
+                                    seed=seed, **kw)
+
+    def _register(cp):
+        cp.register_tenant("gold", weight=3.0)
+        cp.register_tenant("bronze", weight=1.0)
+        return cp
+
+    central = _drive_plane(_register(_fresh()), reqs, pumps)
+    points = []
+    for (R, fanout) in sweep:
+        cp = _register(_fresh(R, fanout))
+        rec = _drive_plane(cp, reqs, pumps)
+        rec.update({
+            "R": R, "fanout": fanout,
+            "coordination": cp.coordination_report(),
+            "gossip_messages_per_round": (
+                cp.bus.messages_sent / max(cp.bus.rounds, 1)
+            ),
+        })
+        points.append(rec)
+
+    # the fairness gate grades the most decentralized point with the most
+    # gossip: largest R, then largest fanout, in whatever sweep ran
+    gate = max(points, key=lambda x: (x["R"], x["fanout"]))
+    record = {
+        "n": n, "p": p, "n_per_tenant": n_per_tenant, "pumps": pumps,
+        "seed": seed, "method": method, "weights": {"gold": 3.0, "bronze": 1.0},
+        "centralized": central,
+        "sweep": points,
+        "criterion": {
+            "gate_point": {"R": gate["R"], "fanout": gate["fanout"]},
+            "r4_fairness_within_15pct_of_centralized": bool(
+                gate["max_deviation"] <= central["max_deviation"] + 0.15
+            ),
+            "r4_centralized_deviation": central["max_deviation"],
+            "r4_regional_deviation": gate["max_deviation"],
+            "gossip_messages_O_R_fanout": all(
+                x["coordination"]["gossip_messages"]
+                == pumps * x["R"] * min(x["fanout"], x["R"] - 1)
+                for x in points
+            ),
+            "r1_bit_identity": "enforced in tests/test_regions.py",
+        },
+    }
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="regional sweep only, CI sizes; writes "
+                         "BENCH_messages.json")
+    args = ap.parse_args()
+    if args.smoke:
+        rec = run_regional()
+    else:
+        for row in run():
+            print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+        rec = run_regional()
+    print(json.dumps(
+        {"regional": {k: rec[k] for k in ("centralized", "criterion")},
+         "sweep": [
+             {k: x[k] for k in ("R", "fanout", "max_deviation",
+                                "admitted_fraction",
+                                "gossip_messages_per_round")}
+             for x in rec["sweep"]
+         ]}, indent=2))

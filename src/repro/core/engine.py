@@ -64,6 +64,13 @@ class Stats:
     # benchmark row tells the whole admission story.
     preemptions: int = 0  # tickets displaced by higher-class admissions
     defrag_rounds: int = 0  # global re-optimization passes attempted
+    # regional control plane (repro.service.regions): cross-region
+    # coordination traffic — push-gossip share dissemination and the
+    # two-phase commit protocol placing region-spanning dataflows.  Both
+    # fold into messages_sent so one column compares a decentralized plane
+    # against the per-solve flooding counts of the async simulator.
+    gossip_messages: int = 0  # share-estimate pushes (O(R*fanout) per round)
+    twopc_messages: int = 0  # reserve/commit/abort traffic for spanning dfs
 
 
 def _unify(native, method: str) -> Stats:
@@ -88,6 +95,8 @@ def _unify(native, method: str) -> Stats:
     )
     s.preemptions = int(getattr(native, "preempted", 0))
     s.defrag_rounds = int(getattr(native, "defrag_rounds", 0))
+    s.gossip_messages = int(getattr(native, "gossip_messages", 0))
+    s.twopc_messages = int(getattr(native, "twopc_messages", 0))
     return s
 
 

@@ -258,7 +258,7 @@ class OnlinePlacer:
 
     def admit_preempting(
         self, df: DataflowPath, *, tenant: str = "", klass: int = 0,
-        max_preempt: int = 8,
+        max_preempt: int = 8, max_displaced_cost: Optional[float] = None,
     ) -> tuple[Optional[Ticket], list[Ticket]]:
         """Admit, displacing strictly-lower-class tickets if necessary.
 
@@ -274,6 +274,12 @@ class OnlinePlacer:
         class > k.  Returns ``(ticket, preempted)``; the caller owns
         re-queueing the preempted work (e.g. through its tenant queue in
         the control plane).
+
+        ``max_displaced_cost`` is the preemption *cost budget*: the summed
+        committed compute of the displaced victims may not exceed it.  A
+        victim that fits exactly at the budget may still be displaced; the
+        first victim that would push past it ends the probe, which then
+        rolls back cleanly if the request is still infeasible.
         """
         rejected0 = self.stats.rejected  # a served request is not a rejection
         t = self.admit(df, tenant=tenant, klass=klass)
@@ -300,9 +306,17 @@ class OnlinePlacer:
         )
         snap = self.snapshot()
         preempted: list[Ticket] = []
+        displaced_cost = 0.0
         for v in victims[:max_preempt]:
+            vcost = sum(v.node_load.values())
+            if (
+                max_displaced_cost is not None
+                and displaced_cost + vcost > max_displaced_cost + 1e-9
+            ):
+                break  # over budget: end the probe (rolls back below)
             self.release(v, reason="preempted")
             preempted.append(v)
+            displaced_cost += vcost
             t = self.admit(df, tenant=tenant, klass=klass)
             if t is not None:
                 # probe rejections along the way are not real rejections

@@ -9,9 +9,24 @@ front ends:
                 ``admit_many`` micro-batches, preemption, churn
                 reconciliation, conservation ledger
   defrag:       atomic global re-optimization of the standing ticket set
+  gossip:       GossipBus — push-gossip of versioned per-region share
+                estimates (R * fanout messages per round)
+  regions:      RegionalControlPlane — R sharded planes coordinated only
+                by gossip + bounded 2PC over cut edges; constructed by
+                ``ControlPlane(rg, regions=R)``, bit-identical to the
+                centralized plane at R = 1
 """
 from .controlplane import ControlPlane, Request, TenantState  # noqa: F401
 from .defrag import DefragResult, defrag, global_objective  # noqa: F401
+from .gossip import GossipBus, ShareRecord  # noqa: F401
+from .regions import (  # noqa: F401
+    RegionalControlPlane,
+    SpanningTicket,
+    cut_edges,
+    partition_regions,
+    region_subgraph,
+    split_dataflow,
+)
 from .policy import (  # noqa: F401
     CLASS_BEST_EFFORT,
     CLASS_CRITICAL,

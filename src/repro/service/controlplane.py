@@ -70,20 +70,39 @@ class TenantState:
 
 
 class ControlPlane:
-    """Fair admission + preemption classes + background defrag."""
+    """Fair admission + preemption classes + background defrag.
+
+    ``ControlPlane(rg, regions=R)`` with ``R > 1`` constructs the
+    decentralized regional plane instead (``service.regions``): the network
+    is sharded into R regions, each with its own queues/residual/placer,
+    coordinated only by gossiped share estimates and a bounded two-phase
+    commit for region-spanning dataflows.  ``R = 1`` (the default) is this
+    centralized plane — the bit-identical degenerate case.
+    """
+
+    def __new__(cls, rg=None, *args, regions: int = 1, **kwargs):
+        if cls is ControlPlane and int(regions) > 1:
+            from .regions import RegionalControlPlane
+
+            # not a ControlPlane subclass, so __init__ below is not re-run
+            return RegionalControlPlane(rg, regions=regions, **kwargs)
+        return super().__new__(cls)
 
     def __init__(
         self,
         rg: ResourceGraph,
         *,
+        regions: int = 1,
         policy: Optional[FairSharePolicy] = None,
         micro_batch: int = 32,
         max_attempts: int = 8,
         preempt: bool = True,
+        preempt_budget: Optional[float] = None,
         method: str = "leastcost_jax",
         use_kernel: bool = False,
         **solve_cfg,
     ):
+        assert int(regions) <= 1, "regions > 1 is dispatched in __new__"
         self.placer = OnlinePlacer(
             rg, method=method, use_kernel=use_kernel, **solve_cfg
         )
@@ -91,10 +110,19 @@ class ControlPlane:
         self.micro_batch = int(micro_batch)
         self.max_attempts = int(max_attempts)
         self.preempt = bool(preempt)
+        self.preempt_budget = preempt_budget
         self.tenants: dict[str, TenantState] = {}
         self.active: dict[int, tuple[Request, Ticket]] = {}  # by rid
         self._rid_of_tid: dict[int, int] = {}
         self._rid = itertools.count()
+        # victims preempted here that this plane does not own (e.g. spanning
+        # segments reserved by the regional broker) are handed to this hook
+        # so their composite placements can be reconciled
+        self.on_foreign_preempt: Optional[callable] = None
+        # called with the Request whenever this plane drops it (attempts
+        # exhausted) — lets an owner of external rid maps (the regional
+        # broker) forget its bookkeeping for terminal requests
+        self.on_drop: Optional[callable] = None
 
     # -- registration / submission ------------------------------------------
 
@@ -148,6 +176,12 @@ class ControlPlane:
             for t, st in self.tenants.items()
         }
 
+    def active_ids(self) -> list[int]:
+        """Sorted rids of the currently active (admitted, unreleased)
+        requests — the handles :meth:`release` accepts.  Mirrored by the
+        regional plane so callers can stay plane-agnostic."""
+        return sorted(self.active)
+
     def rid_of(self, ticket: Ticket) -> Optional[int]:
         """The request id an admitted ticket belongs to (stable across
         re-mapping and defrag, which preserve tids)."""
@@ -187,6 +221,31 @@ class ControlPlane:
 
     def _drop(self, req: Request) -> None:
         self.tenants[req.tenant].dropped += 1
+        if self.on_drop is not None:
+            self.on_drop(req)
+
+    def preempt_reclaim(self, victims: list[Ticket]) -> list[Ticket]:
+        """Re-queue displaced victims this plane owns: each re-enters its
+        tenant queue at the front of its class band (accounted, never
+        dropped).  Victims whose tid is unknown here — e.g. segments of a
+        region-spanning placement reserved directly by the regional broker —
+        are returned for the caller to reconcile."""
+        leftovers: list[Ticket] = []
+        owned: list[Request] = []
+        for v in victims:
+            vrid = self._rid_of_tid.get(v.tid)
+            if vrid is None:
+                leftovers.append(v)
+                continue
+            vreq, _ = self._deactivate(vrid)
+            vreq.attempts = 0
+            self.tenants[vreq.tenant].preempted += 1
+            owned.append(vreq)
+        # front-of-class insertion reverses a batch; requeue back-to-front
+        # so displaced work keeps its relative (FIFO-within-class) order
+        for vreq in reversed(owned):
+            self._requeue(vreq, front=True)
+        return leftovers
 
     def _try_preempt(self, req: Request) -> Optional[Ticket]:
         """Attempt class-ordered preemptive admission for ``req``; on
@@ -198,17 +257,14 @@ class ControlPlane:
         ):
             return None
         ticket, victims = self.placer.admit_preempting(
-            req.df, tenant=req.tenant, klass=req.klass
+            req.df, tenant=req.tenant, klass=req.klass,
+            max_displaced_cost=self.preempt_budget,
         )
         if ticket is None:
             return None
-        for v in victims:
-            vrid = self._rid_of_tid.get(v.tid)
-            if vrid is not None:
-                vreq, _ = self._deactivate(vrid)
-                vreq.attempts = 0
-                self.tenants[vreq.tenant].preempted += 1
-                self._requeue(vreq, front=True)
+        leftovers = self.preempt_reclaim(victims)
+        if leftovers and self.on_foreign_preempt is not None:
+            self.on_foreign_preempt(leftovers)
         self._activate(req, ticket)
         return ticket
 
@@ -225,7 +281,10 @@ class ControlPlane:
             self._requeue(req, front=True)
         return None
 
-    def pump(self, *, rounds: int = 1) -> list[Ticket]:
+    def pump(
+        self, *, rounds: int = 1,
+        extra_committed: Optional[dict[str, float]] = None,
+    ) -> list[Ticket]:
         """Drain the tenant queues under the fairness policy.
 
         Each round selects up to ``micro_batch`` eligible queue heads
@@ -233,13 +292,25 @@ class ControlPlane:
         admits them as ONE ``admit_many`` micro-batch — the batched kernel
         serves the whole drain.  Rejections go through preemption /
         retry / drop handling.  Returns the tickets admitted.
+
+        ``extra_committed`` (tenant -> compute) is added to the live local
+        accounting before the fairness selection: the regional plane passes
+        each region the *gossiped estimate* of what every tenant holds in
+        the other regions, so the drain enforces estimated global shares
+        without any global view.  Admission itself still validates against
+        this plane's own residual only — stale estimates can skew the drain
+        order, never over-commit capacity.
         """
         admitted: list[Ticket] = []
         cfgs = {t: st.cfg for t, st in self.tenants.items()}
         for _ in range(rounds):
             queues = {t: st.queue for t, st in self.tenants.items()}
+            committed = self.committed_capacity()
+            for t, c in (extra_committed or {}).items():
+                if t in committed:
+                    committed[t] += float(c)
             picked = self.policy.select(
-                cfgs, queues, self.committed_capacity(), self.micro_batch
+                cfgs, queues, committed, self.micro_batch
             )
             if not picked:
                 break
@@ -289,6 +360,7 @@ class ControlPlane:
                 self.active[rid] = (req, nt)
         rescued: list[Ticket] = []
         requeued: list[Ticket] = []
+        to_requeue: list[Request] = []
         for old in dropped:
             rid = self._rid_of_tid.get(old.tid)
             if rid is None:
@@ -298,10 +370,13 @@ class ControlPlane:
             self.tenants[req.tenant].preempted += 1
             t = self._try_preempt(req)
             if t is None:
-                self._requeue(req, front=True)
+                to_requeue.append(req)
                 requeued.append(old)
             else:
                 rescued.append(t)
+        # back-to-front so the batch keeps FIFO-within-class order
+        for req in reversed(to_requeue):
+            self._requeue(req, front=True)
         alive = [
             t for t in remapped + rescued
             if self.placer.tickets.get(t.tid) is t  # rescue may preempt one

@@ -1,0 +1,900 @@
+"""Decentralized regional control plane: sharded queues, gossiped shares,
+and bounded two-phase commit for region-spanning dataflows.
+
+The paper argues mapping should be computable *without* aggregating global
+network state at one node.  PR 3's :class:`ControlPlane` still held a
+global view; this module shards it.  ``ControlPlane(rg, regions=R)``
+builds a :class:`RegionalControlPlane`:
+
+- the network is partitioned into R balanced, BFS-grown regions
+  (:func:`partition_regions`); each region owns a full centralized
+  :class:`ControlPlane` over its subgraph (:func:`region_subgraph`) —
+  its own tenant queues, residual view, and ``OnlinePlacer``.  Composition
+  makes ``R = 1`` the *bit-identical* degenerate case: one region, the
+  whole graph, no broker in the path.
+- regions never read each other's live accounting.  A
+  :class:`~repro.service.gossip.GossipBus` spreads versioned per-tenant
+  committed-share / residual estimates on a configurable fanout & period
+  (``R * fanout`` messages per round, independent of node count) and each
+  region's fair-share drain runs against *local truth + gossiped
+  estimates* (``ControlPlane.pump(extra_committed=...)``).  Stale
+  estimates can only skew drain order — admission always validates
+  against the region's own residual, so capacity is never over-committed
+  (property-tested with maximally stale gossip in ``tests/test_regions``).
+- a request whose endpoints live in different regions is decomposed at a
+  *cut edge*: dataflow nodes ``0..s`` become a segment pinned to the cut's
+  tail gateway in the source region, nodes ``s+1..p-1`` a segment pinned
+  to the head gateway in the destination region, and the cut link carries
+  dataflow edge ``s`` (:func:`split_dataflow`).  The broker tries at most
+  ``max_cut_attempts`` (split, cut-edge) candidates — splits ordered by
+  compute balance, cuts by latency — and places each candidate with a
+  bounded two-phase commit: reserve the segments in their regions
+  (optionally preempting strictly-lower classes under the
+  ``preempt_budget`` displaced-cost cap), reserve the cut bandwidth, then
+  commit — or roll every reservation back.  2PC traffic is counted in
+  ``Stats.twopc_messages``; gossip in ``Stats.gossip_messages``.
+
+The per-region subgraphs keep *global* node ids (out-of-region capacity
+masked to zero, links removed): tickets, routes and failure injection use
+one id space, and cross-region conservation stays checkable.  A
+production plane would compact each subgraph; the subject here is the
+coordination structure and its message complexity, not per-region FLOPs.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from ..core import engine
+from ..core.graph import INF, DataflowPath, ResourceGraph
+from ..core.online import Ticket
+from .controlplane import ControlPlane, Request, TenantState
+from .gossip import GossipBus
+from .policy import FairSharePolicy, TenantConfig, maxmin_shares
+
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# partitioning
+# ---------------------------------------------------------------------------
+
+
+def partition_regions(rg: ResourceGraph, R: int, *, seed: int = 0) -> np.ndarray:
+    """Balanced BFS partition: node -> region id in ``[0, R)``.
+
+    R seed nodes are drawn (seeded rng), then regions grow breadth-first
+    one node per sweep — sizes differ by at most one.  A region whose
+    frontier is exhausted (disconnected remainder) grabs the
+    lowest-indexed unassigned node, so every node is always assigned.
+    Deterministic for a fixed (graph, R, seed).
+    """
+    n = rg.n
+    R = max(1, min(int(R), n))
+    if R == 1:
+        return np.zeros(n, np.int64)
+    rng = np.random.default_rng(seed)
+    assign = np.full(n, -1, np.int64)
+    seeds = np.sort(rng.choice(n, size=R, replace=False))
+    frontiers: list[collections.deque] = []
+    for r, s in enumerate(seeds):
+        assign[s] = r
+        frontiers.append(collections.deque(rg.neighbors(int(s))))
+    unassigned = n - R
+    while unassigned:
+        for r in range(R):
+            node = None
+            while frontiers[r]:
+                cand = int(frontiers[r].popleft())
+                if assign[cand] < 0:
+                    node = cand
+                    break
+            if node is None:
+                rem = np.nonzero(assign < 0)[0]
+                if rem.size == 0:
+                    break
+                node = int(rem[0])
+            assign[node] = r
+            frontiers[r].extend(rg.neighbors(node))
+            unassigned -= 1
+            if not unassigned:
+                break
+    return assign
+
+
+def region_subgraph(rg: ResourceGraph, assign: np.ndarray, r: int) -> ResourceGraph:
+    """The subgraph region ``r`` owns, in the global id space: out-of-region
+    nodes keep their ids but lose all capacity and links.  With one region
+    this reproduces ``rg`` exactly (the R=1 identity hinges on it)."""
+    mine = assign == r
+    pair = mine[:, None] & mine[None, :]
+    cap = np.where(mine, rg.cap, 0.0).astype(np.float32)
+    bw = np.where(pair, rg.bw, 0.0).astype(np.float32)
+    lat = np.where(pair, rg.lat, INF).astype(np.float32)
+    np.fill_diagonal(lat, 0.0)
+    return ResourceGraph(cap, bw, lat)
+
+
+def cut_edges(rg: ResourceGraph, assign: np.ndarray) -> list[tuple[int, int]]:
+    """Directed physical links crossing a region boundary."""
+    return [
+        (u, v) for (u, v) in rg.edges() if assign[u] != assign[v]
+    ]
+
+
+def split_dataflow(
+    df: DataflowPath, s: int, u: int, v: int
+) -> tuple[DataflowPath, DataflowPath]:
+    """Decompose ``df`` at dataflow edge ``s`` across the cut link (u, v):
+    nodes ``0..s`` stay in the source region with node ``s`` pinned to the
+    tail gateway ``u``; nodes ``s+1..p-1`` go to the destination region
+    with node ``s+1`` pinned to the head gateway ``v``; the cut link
+    carries ``breq[s]``."""
+    seg_a = DataflowPath(
+        np.asarray(df.creq[: s + 1], np.float32),
+        np.asarray(df.breq[:s], np.float32),
+        int(df.src), int(u),
+    )
+    seg_b = DataflowPath(
+        np.asarray(df.creq[s + 1:], np.float32),
+        np.asarray(df.breq[s + 1:], np.float32),
+        int(v), int(df.dst),
+    )
+    return seg_a, seg_b
+
+
+# ---------------------------------------------------------------------------
+# spanning placements
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class SpanningTicket:
+    """Composite handle for a cross-region placement: one reserved segment
+    per region plus the cut-bandwidth reservation.  ``parts`` hold tids,
+    not Ticket objects — region defrag re-keys tickets under stable tids,
+    so the handle survives re-optimization."""
+
+    rid: int
+    req: Request
+    parts: list[tuple[int, int, DataflowPath]]  # (region, tid, segment)
+    cut: tuple[int, int]
+    cut_bw: float
+    split: int  # dataflow edge index carried by the cut link
+
+    @property
+    def tenant(self) -> str:
+        return self.req.tenant
+
+    @property
+    def klass(self) -> int:
+        return self.req.klass
+
+    @property
+    def df(self) -> DataflowPath:
+        return self.req.df
+
+
+class RegionalControlPlane:
+    """R sharded control planes + gossip + a cut-edge 2PC broker.
+
+    Mirrors the centralized :class:`ControlPlane` surface (register_tenant
+    / submit / pump / release / fail_* / restore_* / defrag /
+    committed_capacity / conservation / fairness_report / engine_stats /
+    check_invariants / active_ids), so call sites are plane-agnostic.
+    ``pump`` returns a mix of :class:`Ticket` (in-region) and
+    :class:`SpanningTicket` (cross-region) handles; ``defrag`` returns one
+    :class:`~repro.service.defrag.DefragResult` per region — there is no
+    global re-solve, by design.
+    """
+
+    def __init__(
+        self,
+        rg: ResourceGraph,
+        *,
+        regions: int = 2,
+        policy: Optional[FairSharePolicy] = None,
+        micro_batch: int = 32,
+        max_attempts: int = 8,
+        preempt: bool = True,
+        preempt_budget: Optional[float] = None,
+        method: str = "leastcost_jax",
+        use_kernel: bool = False,
+        fanout: int = 2,
+        gossip_period: int = 1,
+        max_cut_attempts: int = 4,
+        seed: int = 0,
+        **solve_cfg,
+    ):
+        self.base = rg
+        self.region_of = partition_regions(rg, regions, seed=seed)
+        self.R = int(self.region_of.max()) + 1
+        self.policy = policy or FairSharePolicy()
+        self.micro_batch = int(micro_batch)
+        self.max_attempts = int(max_attempts)
+        self.preempt = bool(preempt)
+        self.preempt_budget = preempt_budget
+        self.method = method
+        self.max_cut_attempts = int(max_cut_attempts)
+        self.regions = [
+            ControlPlane(
+                region_subgraph(rg, self.region_of, r),
+                policy=self.policy,
+                micro_batch=micro_batch,
+                max_attempts=max_attempts,
+                preempt=preempt,
+                preempt_budget=preempt_budget,
+                method=method,
+                use_kernel=use_kernel,
+                **solve_cfg,
+            )
+            for r in range(self.R)
+        ]
+        for r, cp in enumerate(self.regions):
+            # an in-region preemption rescue may evict a spanning segment;
+            # the broker must then tear down its sibling reservations
+            cp.on_foreign_preempt = (
+                lambda tickets, r=r: [
+                    self._displace_span_part(r, t) for t in tickets
+                ]
+            )
+            # a region dropping a local request terminates its lifecycle;
+            # forget the broker's global-rid bookkeeping for it
+            cp.on_drop = (
+                lambda lreq, r=r: self._forget_local(r, lreq.rid)
+            )
+        self.bus = GossipBus(self.R, fanout=fanout, seed=seed + 1)
+        self.gossip_period = max(1, int(gossip_period))
+        self.node_up = np.ones(rg.n, bool)
+
+        # cut-edge bandwidth ledger: owned by the broker, reserved by 2PC
+        self.cut_base: dict[tuple[int, int], float] = {}
+        self.cut_residual: dict[tuple[int, int], float] = {}
+        self.cut_link_up: dict[tuple[int, int], bool] = {}
+        self._cut_by_pair: dict[tuple[int, int], list[tuple[int, int]]] = {}
+        for (u, v) in cut_edges(rg, self.region_of):
+            self.cut_base[(u, v)] = float(rg.bw[u, v])
+            self.cut_residual[(u, v)] = float(rg.bw[u, v])
+            self.cut_link_up[(u, v)] = True
+            self._cut_by_pair.setdefault(
+                (int(self.region_of[u]), int(self.region_of[v])), []
+            ).append((u, v))
+
+        # spanning-request bookkeeping (the broker's ledger)
+        self.span_tenants: dict[str, TenantState] = {}
+        self._span_q: list[dict[str, collections.deque]] = [
+            {} for _ in range(self.R)
+        ]
+        self._span_active: dict[int, SpanningTicket] = {}
+        self._part_of: dict[tuple[int, int], int] = {}  # (region, tid) -> rid
+
+        # global rid space over both local and spanning requests
+        self._rid = itertools.count()
+        self._local: dict[int, tuple[int, int]] = {}  # rid -> (region, lrid)
+        self._grid_of: dict[tuple[int, int], int] = {}  # (region, lrid) -> rid
+        self._pumps = 0
+        self._twopc_msgs = 0
+        # while a churn call (fail_node/fail_link) is reconciling, spanning
+        # placements torn down by in-region rescue preemptions collect here
+        # so the churn return contract covers them too
+        self._churn_collector: Optional[list] = None
+        self.span_stats = {
+            "attempts": 0, "admitted": 0, "dropped": 0,
+            "displaced": 0, "no_cut": 0,
+        }
+
+    # -- registration / submission ------------------------------------------
+
+    def register_tenant(
+        self, name: str, *, weight: float = 1.0,
+        budget: Optional[float] = None,
+    ) -> TenantConfig:
+        if name in self.span_tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        cfg = TenantConfig(name, weight=weight, budget=budget)
+        for cp in self.regions:
+            cp.register_tenant(name, weight=weight, budget=budget)
+        self.span_tenants[name] = TenantState(cfg)
+        for q in self._span_q:
+            q[name] = collections.deque()
+        return cfg
+
+    def submit(self, tenant: str, df: DataflowPath, *, klass: int = 0) -> int:
+        """Queue a request with its *home* (source) region; a request whose
+        endpoints straddle regions queues with the home region's broker
+        side instead and is placed by 2PC at pump time.  Returns a global
+        rid valid across regions."""
+        st = self.span_tenants[tenant]  # KeyError for unregistered
+        rid = next(self._rid)
+        ra = int(self.region_of[df.src])
+        rb = int(self.region_of[df.dst])
+        if ra == rb:
+            lrid = self.regions[ra].submit(tenant, df, klass=klass)
+            self._local[rid] = (ra, lrid)
+            self._grid_of[(ra, lrid)] = rid
+        else:
+            st.submitted += 1
+            ControlPlane._enqueue(
+                self._span_q[ra][tenant], Request(rid, tenant, df, klass=klass)
+            )
+        return rid
+
+    # -- live accounting -----------------------------------------------------
+
+    def _region_committed(self, r: int) -> dict[str, float]:
+        """Region r's exact local per-tenant committed compute, from the
+        placer tickets (includes spanning segments reserved there)."""
+        held = {t: 0.0 for t in self.span_tenants}
+        for tk in self.regions[r].placer.tickets.values():
+            if tk.tenant in held:
+                held[tk.tenant] += float(np.sum(tk.df.creq))
+        return held
+
+    def committed_capacity(self) -> dict[str, float]:
+        held = {t: 0.0 for t in self.span_tenants}
+        for r in range(self.R):
+            for t, c in self._region_committed(r).items():
+                held[t] += c
+        return held
+
+    def queued_demand(self) -> dict[str, float]:
+        out = {t: 0.0 for t in self.span_tenants}
+        for cp in self.regions:
+            for t, c in cp.queued_demand().items():
+                out[t] += c
+        for q in self._span_q:
+            for t, dq in q.items():
+                out[t] += sum(r.creq_sum for r in dq)
+        return out
+
+    def active_ids(self) -> list[int]:
+        """Global rids of active requests across every region + spanning."""
+        out = [
+            self._grid_of[(r, lrid)]
+            for r, cp in enumerate(self.regions)
+            for lrid in cp.active
+        ]
+        out += list(self._span_active)
+        return sorted(out)
+
+    def conservation(self) -> dict[str, int]:
+        """The global ticket ledger: regional ledgers + the broker's
+        spanning ledger.  ``ok`` iff every submitted request is in exactly
+        one state *summed over regions*."""
+        agg = {"submitted": 0, "queued": 0, "active": 0, "released": 0,
+               "dropped": 0}
+        for cp in self.regions:
+            led = cp.conservation()
+            for k in agg:
+                agg[k] += led[k]
+        agg["submitted"] += sum(
+            st.submitted for st in self.span_tenants.values())
+        agg["queued"] += sum(
+            len(dq) for q in self._span_q for dq in q.values())
+        agg["active"] += len(self._span_active)
+        agg["released"] += sum(
+            st.released for st in self.span_tenants.values())
+        agg["dropped"] += sum(
+            st.dropped for st in self.span_tenants.values())
+        agg["ok"] = agg["submitted"] == (
+            agg["queued"] + agg["active"] + agg["released"] + agg["dropped"]
+        )
+        return agg
+
+    # -- gossip --------------------------------------------------------------
+
+    def _publish(self, r: int) -> None:
+        cp = self.regions[r]
+        queued = cp.queued_demand()
+        for t, dq in self._span_q[r].items():
+            queued[t] = queued.get(t, 0.0) + sum(x.creq_sum for x in dq)
+        residual = float(
+            np.sum(np.where(cp.placer.node_up, cp.placer.cap, 0.0))
+        )
+        self.bus.publish(r, self._region_committed(r), queued, residual)
+
+    # -- admission -----------------------------------------------------------
+
+    def pump(self, *, rounds: int = 1) -> list:
+        """One decentralized drain round per ``rounds``: publish + gossip
+        share estimates, drain every region's queues under
+        estimated-global fair shares, then place queued spanning requests
+        by bounded 2PC.  Returns the still-live admitted handles
+        (:class:`Ticket` for in-region, :class:`SpanningTicket` for
+        cross-region)."""
+        admitted: list[Ticket] = []
+        spanned: list[SpanningTicket] = []
+        for _ in range(int(rounds)):
+            self._pumps += 1
+            for r in range(self.R):
+                self._publish(r)
+            if self.R > 1 and self._pumps % self.gossip_period == 0:
+                self.bus.tick()
+            for r, cp in enumerate(self.regions):
+                extra = None
+                if self.R > 1:
+                    # gossiped estimate of remote holdings, plus the
+                    # broker-reserved spanning segments physically held in
+                    # THIS region (they are placer tickets but not local
+                    # control-plane requests, so the local accounting
+                    # cannot see them)
+                    extra = self.bus.remote_committed(r)
+                    local_cp = cp.committed_capacity()
+                    for t, c in self._region_committed(r).items():
+                        diff = c - local_cp.get(t, 0.0)
+                        if diff > _EPS:
+                            extra[t] = extra.get(t, 0.0) + diff
+                admitted += cp.pump(rounds=1, extra_committed=extra or None)
+            spanned += self._pump_spanning()
+        live = [
+            t for t in admitted
+            if any(cp.placer.tickets.get(t.tid) is t for cp in self.regions)
+        ]
+        live += [s for s in spanned if s.rid in self._span_active]
+        return live
+
+    def _pump_spanning(self) -> list[SpanningTicket]:
+        if self.R <= 1:
+            return []
+        out: list[SpanningTicket] = []
+        cfgs = {t: st.cfg for t, st in self.span_tenants.items()}
+        for r in range(self.R):
+            queues = self._span_q[r]
+            if not any(queues.values()):
+                continue
+            committed = self._region_committed(r)
+            for t, c in self.bus.remote_committed(r).items():
+                if t in committed:
+                    committed[t] += c
+            picked = self.policy.select(
+                cfgs, queues, committed, self.micro_batch
+            )
+            # pop every selected head BEFORE placing: a 2PC attempt may
+            # displace another spanning request to the front of one of
+            # these very queues, which must not disturb the drain order
+            for req in picked:
+                q = queues[req.tenant]
+                assert q[0] is req, "policy must select queue heads in order"
+                q.popleft()
+            for req in picked:
+                q = queues[req.tenant]
+                self.span_stats["attempts"] += 1
+                st = self._try_place_spanning(req)
+                if st is not None:
+                    self.span_stats["admitted"] += 1
+                    self.span_tenants[req.tenant].admitted += 1
+                    out.append(st)
+                else:
+                    req.attempts += 1
+                    if req.attempts >= self.max_attempts:
+                        self.span_tenants[req.tenant].dropped += 1
+                        self.span_stats["dropped"] += 1
+                    else:
+                        ControlPlane._enqueue(q, req, front_of_class=True)
+        return out
+
+    # -- two-phase commit over cut edges -------------------------------------
+
+    def _cut_alive(self, u: int, v: int) -> bool:
+        return (
+            self.cut_link_up.get((u, v), False)
+            and bool(self.node_up[u]) and bool(self.node_up[v])
+        )
+
+    def _candidate_cuts(self, df: DataflowPath, ra: int, rb: int) -> list:
+        """Up to ``max_cut_attempts`` (split, cut-edge) candidates: splits
+        ordered by compute balance between the halves, cut edges by link
+        latency; gateway pinning must stay consistent with the pinned
+        endpoints, and the cut must have the bandwidth left."""
+        edges = [
+            e for e in self._cut_by_pair.get((ra, rb), ())
+            if self._cut_alive(*e)
+        ]
+        if not edges:
+            return []
+        edges.sort(key=lambda e: float(self.base.lat[e]))
+        total = float(np.sum(df.creq))
+        prefix = np.cumsum(df.creq.astype(np.float64))
+        splits = sorted(
+            range(df.p - 1),
+            key=lambda s: (abs(2.0 * float(prefix[s]) - total), s),
+        )
+        out = []
+        for s in splits:
+            need = float(df.breq[s])
+            for (u, v) in edges:
+                if s == 0 and u != df.src:
+                    continue  # a 1-node head segment pins src == gateway
+                if s == df.p - 2 and v != df.dst:
+                    continue  # a 1-node tail segment pins gateway == dst
+                if self.cut_residual[(u, v)] + _EPS < need:
+                    continue
+                out.append((s, u, v))
+                if len(out) >= self.max_cut_attempts:
+                    return out
+        return out
+
+    def _reserve_plain(self, r: int, seg: DataflowPath, tenant: str,
+                       klass: int) -> Optional[Ticket]:
+        """Phase-1 reserve of one segment in region ``r`` against its own
+        residual only — freely abortable, displaces nothing."""
+        return self.regions[r].placer.admit(seg, tenant=tenant, klass=klass)
+
+    def _reserve_preempting(self, r: int, seg: DataflowPath, tenant: str,
+                            klass: int) -> Optional[Ticket]:
+        """Preemptive phase-1 reserve under the displaced-cost budget.
+
+        Only called for the LAST missing reservation of a candidate — every
+        sibling reservation is already held, so success here guarantees the
+        commit and victims are never displaced by an admission that then
+        aborts (a failed probe rolls back inside ``admit_preempting``).
+        Victims owned by the region's plane re-enter its tenant queues; a
+        victim that is itself a spanning segment displaces its whole
+        spanning placement back to the broker queue (accounted, never
+        dropped)."""
+        cp = self.regions[r]
+        t, victims = cp.placer.admit_preempting(
+            seg, tenant=tenant, klass=klass,
+            max_displaced_cost=self.preempt_budget,
+        )
+        if victims:
+            for part in cp.preempt_reclaim(victims):
+                self._displace_span_part(r, part)
+        return t
+
+    def _abort_reservation(self, r: int, ticket: Ticket) -> None:
+        """Undo a phase-1 reserve: bookkeeping-only release (no released
+        counter, no admitted inflation)."""
+        cp = self.regions[r]
+        cp.placer.release(ticket.tid, reason=None)
+        cp.placer.stats.admitted -= 1  # the reserve never really served
+
+    def _commit_spanning(self, req: Request, s: int, u: int, v: int,
+                         parts: list) -> SpanningTicket:
+        need = float(req.df.breq[s])
+        self.cut_residual[(u, v)] -= need
+        st = SpanningTicket(
+            rid=req.rid, req=req, parts=parts,
+            cut=(u, v), cut_bw=need, split=s,
+        )
+        self._span_active[req.rid] = st
+        for (pr, tid, _seg) in parts:
+            self._part_of[(pr, tid)] = req.rid
+        return st
+
+    def _try_place_spanning(self, req: Request) -> Optional[SpanningTicket]:
+        """Bounded 2PC over the cut candidates.
+
+        Per candidate, reservations are plain (freely abortable) except
+        that the *last* missing one may escalate to budgeted preemption —
+        in at most ONE region per admission, and only when every sibling
+        reservation is already held, so preemption victims are displaced
+        only by an admission that commits.  A candidate that cannot
+        complete aborts every reservation it took; nothing standing is
+        ever destroyed by a failed attempt."""
+        df = req.df
+        ra = int(self.region_of[df.src])
+        rb = int(self.region_of[df.dst])
+        candidates = self._candidate_cuts(df, ra, rb)
+        if not candidates:
+            self.span_stats["no_cut"] += 1
+            return None
+        can_preempt = self.preempt and req.klass > 0
+        for (s, u, v) in candidates:
+            need = float(df.breq[s])
+            seg_a, seg_b = split_dataflow(df, s, u, v)
+            self._twopc_msgs += 1  # prepare A
+            t_a = self._reserve_plain(ra, seg_a, req.tenant, req.klass)
+            if t_a is not None:
+                if self.cut_residual[(u, v)] + _EPS < need:
+                    self._twopc_msgs += 1  # abort A
+                    self._abort_reservation(ra, t_a)
+                    continue
+                self._twopc_msgs += 1  # prepare B
+                t_b = self._reserve_plain(rb, seg_b, req.tenant, req.klass)
+                if t_b is None and can_preempt:
+                    self._twopc_msgs += 1  # prepare B, preemptive retry
+                    t_b = self._reserve_preempting(
+                        rb, seg_b, req.tenant, req.klass)
+                if t_b is None:
+                    self._twopc_msgs += 2  # nack B + abort A
+                    self._abort_reservation(ra, t_a)
+                    continue
+                self._twopc_msgs += 2  # commit A + commit B
+                return self._commit_spanning(
+                    req, s, u, v,
+                    [(ra, t_a.tid, seg_a), (rb, t_b.tid, seg_b)])
+            self._twopc_msgs += 1  # nack A
+            if not can_preempt:
+                continue
+            # A is the blocker: hold B (plain) first, then preempt into A
+            # as the final reservation of the candidate
+            if self.cut_residual[(u, v)] + _EPS < need:
+                continue
+            self._twopc_msgs += 1  # prepare B
+            t_b = self._reserve_plain(rb, seg_b, req.tenant, req.klass)
+            if t_b is None:
+                self._twopc_msgs += 1  # nack B
+                continue
+            self._twopc_msgs += 1  # prepare A, preemptive
+            t_a = self._reserve_preempting(ra, seg_a, req.tenant, req.klass)
+            if t_a is None:
+                self._twopc_msgs += 2  # nack A + abort B
+                self._abort_reservation(rb, t_b)
+                continue
+            self._twopc_msgs += 2  # commit A + commit B
+            return self._commit_spanning(
+                req, s, u, v,
+                [(ra, t_a.tid, seg_a), (rb, t_b.tid, seg_b)])
+        return None
+
+    def _forget_local(self, r: int, lrid: int) -> None:
+        """A region terminated (dropped) a local request: the global-rid
+        maps must not grow without bound over the plane's lifetime."""
+        rid = self._grid_of.pop((r, lrid), None)
+        if rid is not None:
+            self._local.pop(rid, None)
+
+    def _displace_span_part(self, r: int, part: Ticket) -> None:
+        """A spanning segment was preempted out of region ``r``: tear down
+        the rest of its composite placement (other-region segments + the
+        cut reservation) and requeue the whole request with its home
+        region, front of its class band."""
+        rid = self._part_of.pop((r, part.tid), None)
+        if rid is None:
+            return  # not a spanning segment (placer used directly)
+        st = self._span_active.pop(rid)
+        old_parts = [part]
+        for (pr, tid, _seg) in st.parts:
+            if (pr, tid) == (r, part.tid):
+                continue
+            self._part_of.pop((pr, tid), None)
+            tk = self.regions[pr].placer.tickets.get(tid)
+            if tk is not None:
+                # the displacement event was already counted once by the
+                # victim segment's preemption — siblings are bookkeeping
+                self.regions[pr].placer.release(tid, reason=None)
+                old_parts.append(tk)
+        self.cut_residual[st.cut] += st.cut_bw
+        self.span_stats["displaced"] += 1
+        self.span_tenants[st.tenant].preempted += 1
+        st.req.attempts = 0
+        home = int(self.region_of[st.df.src])
+        ControlPlane._enqueue(
+            self._span_q[home][st.tenant], st.req, front_of_class=True
+        )
+        if self._churn_collector is not None:
+            self._churn_collector.extend(old_parts)
+
+    # -- release / churn ------------------------------------------------------
+
+    def release(self, rid: int) -> None:
+        st = self._span_active.get(rid)
+        if st is not None:
+            del self._span_active[rid]
+            for (pr, tid, _seg) in st.parts:
+                self._part_of.pop((pr, tid), None)
+                self.regions[pr].placer.release(tid)
+            self.cut_residual[st.cut] += st.cut_bw
+            self.span_tenants[st.tenant].released += 1
+            return
+        r, lrid = self._local[rid]
+        self.regions[r].release(lrid)  # raises if not active (caller bug)
+        del self._local[rid]
+        del self._grid_of[(r, lrid)]
+
+    def _displace_spans(self, pred) -> list[Ticket]:
+        """Tear down every active spanning placement matching ``pred`` and
+        requeue its request with its home region (environment displacement
+        is handled exactly like preemption: accounted, never dropped).
+        Returns the old part tickets, mirroring the centralized churn
+        contract."""
+        old: list[Ticket] = []
+        displaced: list[SpanningTicket] = []
+        for rid in [
+            g for g, st in self._span_active.items() if pred(st)
+        ]:
+            st = self._span_active.pop(rid)
+            for (pr, tid, _seg) in st.parts:
+                self._part_of.pop((pr, tid), None)
+                tk = self.regions[pr].placer.tickets.get(tid)
+                if tk is not None:
+                    self.regions[pr].placer.release(tid, reason=None)
+                    old.append(tk)
+            self.cut_residual[st.cut] += st.cut_bw
+            self.span_stats["displaced"] += 1
+            self.span_tenants[st.tenant].preempted += 1
+            st.req.attempts = 0
+            displaced.append(st)
+        # back-to-front so the batch keeps FIFO-within-class order in any
+        # shared home queue
+        for st in reversed(displaced):
+            home = int(self.region_of[st.df.src])
+            ControlPlane._enqueue(
+                self._span_q[home][st.tenant], st.req, front_of_class=True
+            )
+        return old
+
+    def _span_uses_node(self, st: SpanningTicket, v: int) -> bool:
+        if v in st.cut:
+            return True
+        for (pr, tid, _seg) in st.parts:
+            tk = self.regions[pr].placer.tickets.get(tid)
+            if tk is not None and v in tk.mapping.route:
+                return True
+        return False
+
+    def _span_uses_link(self, st: SpanningTicket, u: int, v: int) -> bool:
+        for (pr, tid, _seg) in st.parts:
+            tk = self.regions[pr].placer.tickets.get(tid)
+            if tk is not None and (
+                (u, v) in tk.edge_load or (v, u) in tk.edge_load
+            ):
+                return True
+        return False
+
+    def _churn_call(self, fn) -> tuple[list[Ticket], list[Ticket]]:
+        """Run a region churn operation collecting any spanning placements
+        its rescue preemptions displace, so the ``(alive, requeued)``
+        return covers every handle the event invalidated."""
+        self._churn_collector = hook_old = []
+        try:
+            alive, requeued = fn()
+        finally:
+            self._churn_collector = None
+        return alive, requeued + hook_old
+
+    def fail_node(self, v: int) -> tuple[list[Ticket], list[Ticket]]:
+        """Take node ``v`` down.  Spanning placements touching it (as a
+        gateway or anywhere on a segment route) are displaced back to
+        their broker queues first, then the owning region re-maps its
+        local tickets on the degraded subgraph.  Same ``(alive,
+        requeued)`` contract as the centralized plane; ``requeued`` also
+        covers spanning placements displaced by rescue preemptions during
+        the re-map."""
+        v = int(v)
+        self.node_up[v] = False
+        requeued_span = self._displace_spans(
+            lambda st: self._span_uses_node(st, v)
+        )
+        alive, requeued = self._churn_call(
+            lambda: self.regions[int(self.region_of[v])].fail_node(v)
+        )
+        return alive, requeued + requeued_span
+
+    def fail_link(self, u: int, v: int) -> tuple[list[Ticket], list[Ticket]]:
+        """Take a (symmetric) link down: an in-region link fails through
+        the owning region; a *cut* link partitions the region pair — every
+        spanning placement riding it is displaced and requeued (healed by
+        ``restore_link``)."""
+        u, v = int(u), int(v)
+        if self.region_of[u] == self.region_of[v]:
+            # spanning segments routed over the link must leave through the
+            # broker (the inner remap cannot requeue a composite placement)
+            requeued_span = self._displace_spans(
+                lambda st: self._span_uses_link(st, u, v)
+            )
+            alive, requeued = self._churn_call(
+                lambda: self.regions[int(self.region_of[u])].fail_link(u, v)
+            )
+            return alive, requeued + requeued_span
+        for e in ((u, v), (v, u)):
+            if e in self.cut_link_up:
+                self.cut_link_up[e] = False
+        requeued_span = self._displace_spans(
+            lambda st: st.cut in ((u, v), (v, u))
+        )
+        return [], requeued_span
+
+    def restore_node(self, v: int) -> None:
+        v = int(v)
+        self.node_up[v] = True
+        self.regions[int(self.region_of[v])].restore_node(v)
+
+    def restore_link(self, u: int, v: int) -> None:
+        u, v = int(u), int(v)
+        if self.region_of[u] == self.region_of[v]:
+            self.regions[int(self.region_of[u])].restore_link(u, v)
+            return
+        for e in ((u, v), (v, u)):
+            if e in self.cut_link_up:
+                self.cut_link_up[e] = bool(np.isfinite(self.base.lat[e]))
+
+    # -- defragmentation ------------------------------------------------------
+
+    def defrag(self, *, max_extras: Optional[int] = None) -> list:
+        """Per-region re-optimization — there is deliberately no global
+        re-solve (that would be the centralized plane again).  Spanning
+        segments are standing tickets with pinned gateways, so each region
+        may re-pack them locally; tids (and thus spanning handles) are
+        preserved.  Returns one DefragResult per region."""
+        return [cp.defrag(max_extras=max_extras) for cp in self.regions]
+
+    # -- reporting / invariants ----------------------------------------------
+
+    def engine_stats(self) -> engine.Stats:
+        s = engine.Stats(method=self.method)
+        s.preemptions = sum(
+            cp.placer.stats.preempted for cp in self.regions)
+        s.defrag_rounds = sum(
+            cp.placer.stats.defrag_rounds for cp in self.regions)
+        s.solve_ms = sum(cp.placer.stats.solve_ms for cp in self.regions)
+        s.batch_size = self.micro_batch
+        s.rounds = self.bus.rounds
+        s.gossip_messages = self.bus.messages_sent
+        s.twopc_messages = self._twopc_msgs
+        s.messages_sent = s.gossip_messages + s.twopc_messages
+        return s
+
+    def coordination_report(self) -> dict:
+        """The decentralization story in numbers: gossip volume/staleness
+        and 2PC traffic next to the spanning admission outcomes."""
+        return {
+            "regions": self.R,
+            "fanout": self.bus.fanout,
+            "gossip_period": self.gossip_period,
+            "gossip_rounds": self.bus.rounds,
+            "gossip_messages": self.bus.messages_sent,
+            "gossip_messages_per_round": (
+                self.bus.messages_sent / max(self.bus.rounds, 1)
+            ),
+            "max_staleness": self.bus.max_staleness(),
+            "twopc_messages": self._twopc_msgs,
+            "spanning": dict(self.span_stats),
+            "cut_edges": len(self.cut_base),
+        }
+
+    def fairness_report(self) -> dict:
+        held = self.committed_capacity()
+        queued = self.queued_demand()
+        total = sum(held.values())
+        demands = {t: held[t] + queued[t] for t in self.span_tenants}
+        weights = {
+            t: st.cfg.weight for t, st in self.span_tenants.items()
+        }
+        target = maxmin_shares(demands, weights, total)
+        deviation = {
+            t: abs(held[t] - target[t]) / target[t]
+            for t in self.span_tenants
+            if target[t] > _EPS
+        }
+        return {
+            "committed": held,
+            "queued_demand": queued,
+            "total_committed": total,
+            "target_shares": target,
+            "deviation": deviation,
+            "max_deviation": max(deviation.values(), default=0.0),
+            "coordination": self.coordination_report(),
+        }
+
+    def check_invariants(self) -> None:
+        """Every region's placer + ledger invariants, the global ledger,
+        cut-bandwidth conservation, and spanning-handle integrity."""
+        for cp in self.regions:
+            cp.check_invariants()
+        led = self.conservation()
+        assert led["ok"], f"global ticket conservation violated: {led}"
+        reserved = {e: 0.0 for e in self.cut_base}
+        for st in self._span_active.values():
+            reserved[st.cut] += st.cut_bw
+        for e, base_bw in self.cut_base.items():
+            assert abs(self.cut_residual[e] + reserved[e] - base_bw) < 1e-6, (
+                f"cut bandwidth conservation violated on {e}"
+            )
+            assert self.cut_residual[e] >= -1e-6, (
+                f"negative cut residual on {e}"
+            )
+        for rid, st in self._span_active.items():
+            u, v = st.cut
+            assert self.region_of[u] != self.region_of[v]
+            for (pr, tid, seg) in st.parts:
+                tk = self.regions[pr].placer.tickets.get(tid)
+                assert tk is not None and tk.df is seg, (
+                    f"spanning rid {rid} holds a stale segment in region {pr}"
+                )
+                assert self._part_of.get((pr, tid)) == rid

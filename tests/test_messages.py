@@ -1,0 +1,131 @@
+"""Message-complexity regression tests.
+
+Tier-1 port of the ``bench_messages`` claims with fixed seeds:
+
+1. paper §3.4.1/§3.4.3 — the distributed LeastCostMap policy finds the
+   optimal mapping with a large constant-factor message reduction over
+   exhaustive flooding (the full benchmark measures ~100x at the sizes
+   where flooding still terminates; the fixed-seed floor asserted here is
+   deliberately conservative so solver-order tweaks don't flake CI);
+2. the regional control plane's coordination budget — gossip costs
+   ``R * fanout`` messages per round, *independent of the node count*, and
+   2PC traffic is bounded per spanning attempt: nothing in the
+   decentralized plane re-introduces O(n^2) flooding.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimConfig,
+    pathmap_exact,
+    random_dataflow,
+    solve,
+    waxman,
+)
+from repro.service import RegionalControlPlane
+
+PYM = dict(method="leastcost_python")
+
+
+# ---------------------------------------------------------------------------
+# flooding vs LeastCostMap (paper claim, fixed seeds)
+# ---------------------------------------------------------------------------
+
+
+def _flood_vs_leastcost(n, p, seeds):
+    rows = []
+    for i in seeds:
+        rg = waxman(n, seed=100 + i)
+        df = random_dataflow(rg, p, seed=5100 + i)
+        ex, _ = pathmap_exact(rg, df, max_states=400_000)
+        if ex is None:
+            continue
+        _, flood = solve(rg, df, method="simulate",
+                         cfg=SimConfig(policy="exact",
+                                       max_messages=3_000_000))
+        m, lc = solve(rg, df, method="simulate",
+                      cfg=SimConfig(policy="leastcost"))
+        rows.append({
+            "seed": 100 + i,
+            "flood_msgs": flood.messages_sent,
+            "lc_msgs": lc.messages_sent,
+            "reduction": flood.messages_sent / max(lc.messages_sent, 1),
+            "optimal": m is not None and abs(m.cost - ex.cost) < 1e-4,
+        })
+    return rows
+
+
+def test_leastcost_messages_vs_flooding_fixed_seeds():
+    rows = _flood_vs_leastcost(n=20, p=6, seeds=range(6))
+    assert len(rows) >= 3  # enough feasible instances to mean anything
+    # optimality: the paper claims >99%; on these fixed seeds it is exact
+    assert all(r["optimal"] for r in rows), rows
+    # message reduction: large on every instance, and a much larger mean
+    # (measured ~65x here; thresholds leave headroom for solver-order noise)
+    assert all(r["reduction"] >= 5.0 for r in rows), rows
+    assert np.mean([r["reduction"] for r in rows]) >= 20.0, rows
+
+
+@pytest.mark.slow
+def test_leastcost_messages_vs_flooding_larger_n():
+    """Slow lane: the reduction factor grows with n (paper ~100x)."""
+    rows = _flood_vs_leastcost(n=26, p=5, seeds=range(6))
+    assert len(rows) >= 3
+    assert all(r["optimal"] for r in rows), rows
+    assert np.mean([r["reduction"] for r in rows]) >= 40.0, rows
+
+
+# ---------------------------------------------------------------------------
+# regional plane coordination budget
+# ---------------------------------------------------------------------------
+
+
+def _pump_regional(n, R, fanout, pumps, requests=12):
+    rg = waxman(n, seed=3)
+    cp = RegionalControlPlane(rg, regions=R, fanout=fanout, seed=0, **PYM)
+    cp.register_tenant("a")
+    for i in range(requests):
+        cp.submit("a", random_dataflow(rg, 4, seed=600 + i,
+                                       creq_range=(0.02, 0.1),
+                                       breq_range=(0.5, 2.0)))
+    for _ in range(pumps):
+        cp.pump()
+    cp.check_invariants()
+    return cp
+
+
+def test_gossip_budget_is_R_fanout_per_round_independent_of_n():
+    pumps, R, fanout = 6, 4, 2
+    msgs = {}
+    for n in (16, 32):
+        cp = _pump_regional(n, R, fanout, pumps)
+        s = cp.engine_stats()
+        # exactly R*fanout per gossip round, every round
+        assert s.gossip_messages == pumps * R * fanout
+        msgs[n] = s.gossip_messages
+    # the budget does not grow with the node count...
+    assert msgs[16] == msgs[32]
+    # ...and sits far below one flooding exchange on the same network
+    assert msgs[32] < 32 * 32
+
+
+def test_gossip_budget_scales_linearly_in_R_and_fanout():
+    base = _pump_regional(24, 2, 1, 5).engine_stats().gossip_messages
+    assert base == 5 * 2 * 1
+    assert _pump_regional(24, 4, 1, 5).engine_stats().gossip_messages == 2 * base
+    assert _pump_regional(24, 4, 2, 5).engine_stats().gossip_messages == 4 * base
+    # fanout is clamped to R - 1: a region never pushes to itself
+    assert _pump_regional(24, 2, 5, 5).engine_stats().gossip_messages == base
+
+
+def test_twopc_traffic_bounded_per_spanning_attempt():
+    """Each spanning attempt tries at most max_cut_attempts candidates and
+    each candidate costs a bounded constant of prepare/ack/commit messages
+    (<= 8, incl. the budgeted preemptive-retry orientation): broker
+    coordination is O(attempts), never a network flood."""
+    cp = _pump_regional(24, 4, 2, 6, requests=24)
+    s = cp.engine_stats()
+    attempts = cp.span_stats["attempts"]
+    assert attempts > 0  # the workload did span regions
+    assert s.twopc_messages <= attempts * (8 * cp.max_cut_attempts)
+    assert s.messages_sent == s.gossip_messages + s.twopc_messages

@@ -145,3 +145,34 @@ def test_src_down_rejects():
     placer.restore_node(df.src)
     assert placer.admit(df) is not None
     placer.check_invariants()
+
+
+def test_micro_batch_bucketing_bounds_jit_recompiles():
+    """``admit_many`` buckets the DP batch to the next power of two, so a
+    churny stream of distinct micro-batch sizes compiles at most
+    log2(max batch) specializations of the vmapped DP — not one per size.
+    Counted directly in the jit cache of the shared vmapped driver."""
+    from repro.core import leastcost as lc
+
+    lc._vmapped_dp.cache_clear()
+    rg = waxman(12, seed=3)
+    placer = OnlinePlacer(rg)  # leastcost_jax: the natively-batching path
+    p = 5
+    sizes = [1, 2, 3, 4, 5, 6, 7, 8, 3, 5, 7, 2, 6, 1, 8, 4]
+    assert len(set(sizes)) == 8  # 8 distinct arrival sizes...
+    for j, b in enumerate(sizes):
+        dfs = [
+            random_dataflow(rg, p, seed=900 + 37 * j + i,
+                            creq_range=(0.01, 0.05),
+                            breq_range=(0.2, 1.0))
+            for i in range(b)
+        ]
+        for t in placer.admit_many(dfs):
+            if t is not None:
+                placer.release(t)  # keep capacity churn-free
+        placer.check_invariants()
+    # one (n, p, max_rounds) driver served every batch...
+    assert lc._vmapped_dp.cache_info().currsize == 1
+    fn = lc._vmapped_dp(rg.n, p, rg.n - 1)
+    # ...with only power-of-two batch specializations: {1, 2, 4, 8}
+    assert fn._cache_size() <= 4, fn._cache_size()

@@ -222,6 +222,94 @@ def test_remap_prefers_higher_class_after_failure():
 
 
 # ---------------------------------------------------------------------------
+# preemption cost budgets (bound how much lower-class work one admission
+# may displace)
+# ---------------------------------------------------------------------------
+
+
+def _filled_placer():
+    """Node 1 (cap 4.0) exactly filled by eight 0.5-creq class-0 tickets."""
+    placer = OnlinePlacer(_line_rg(mid_cap=4.0), **PYM)
+    for _ in range(8):
+        assert placer.admit(_unit_df(), tenant="lo", klass=0) is not None
+    return placer
+
+
+def test_preempt_budget_exactly_at_budget_admits():
+    """The request needs 1.0 freed (two 0.5 victims); a displaced-cost
+    budget of exactly 1.0 admits."""
+    placer = _filled_placer()
+    big = DataflowPath.make([0.0, 1.0, 0.0], [1.0, 1.0], src=0, dst=2)
+    t, victims = placer.admit_preempting(big, klass=2,
+                                         max_displaced_cost=1.0)
+    assert t is not None and len(victims) == 2
+    assert sum(sum(v.node_load.values()) for v in victims) == pytest.approx(1.0)
+    assert placer.stats.preempted == 2
+    placer.check_invariants()
+
+
+def test_preempt_budget_one_over_rolls_back_cleanly():
+    """With budget 0.9 the second 0.5 victim would overshoot: the probe
+    must stop and restore everything bit for bit."""
+    placer = _filled_placer()
+    cap0, bw0 = placer.cap.copy(), placer.bw.copy()
+    tids0 = set(placer.tickets)
+    big = DataflowPath.make([0.0, 1.0, 0.0], [1.0, 1.0], src=0, dst=2)
+    t, victims = placer.admit_preempting(big, klass=2,
+                                         max_displaced_cost=0.9)
+    assert t is None and victims == []
+    np.testing.assert_array_equal(placer.cap, cap0)
+    np.testing.assert_array_equal(placer.bw, bw0)
+    assert set(placer.tickets) == tids0
+    assert placer.stats.preempted == 0
+    placer.check_invariants()
+
+
+def test_preempt_budget_zero_disables_displacement_but_not_admission():
+    """Budget 0 forbids displacing anything, yet a request that fits the
+    residual without victims still admits through the same call."""
+    placer = _filled_placer()
+    t, victims = placer.admit_preempting(_unit_df(), klass=2,
+                                         max_displaced_cost=0.0)
+    assert t is None and victims == []  # nothing free, nothing displaceable
+    placer.release(next(iter(placer.tickets.values())))
+    t, victims = placer.admit_preempting(_unit_df(), klass=2,
+                                         max_displaced_cost=0.0)
+    assert t is not None and victims == []  # fits the freed residual
+    placer.check_invariants()
+
+
+def test_preempt_reclaim_preserves_batch_order_within_class():
+    """Re-queueing a batch of displaced victims must not reverse their
+    relative order (front-of-class insertion is applied back-to-front)."""
+    cp = ControlPlane(_line_rg(mid_cap=4.0), micro_batch=8, **PYM)
+    cp.register_tenant("a")
+    rids = [cp.submit("a", _unit_df()) for _ in range(3)]
+    cp.pump()
+    assert sorted(cp.active) == rids
+    tickets = [cp.active[r][1] for r in rids]
+    assert cp.preempt_reclaim(tickets) == []  # all owned here
+    assert [r.rid for r in cp.tenants["a"].queue] == rids
+
+
+def test_controlplane_preempt_budget_plumbs_through():
+    big = DataflowPath.make([0.0, 1.0, 0.0], [1.0, 1.0], src=0, dst=2)
+    for budget, admitted in ((1.0, True), (0.9, False)):
+        cp = ControlPlane(_line_rg(mid_cap=4.0), micro_batch=8,
+                          max_attempts=2, preempt_budget=budget, **PYM)
+        cp.register_tenant("lo")
+        cp.register_tenant("hi")
+        _fill_with_best_effort(cp)
+        cp.submit("hi", big, klass=CLASS_CRITICAL)
+        out = cp.pump(rounds=2)
+        cp.check_invariants()
+        assert bool(out) is admitted, (budget, out)
+        ledger = cp.conservation()
+        assert ledger["ok"] and ledger["dropped"] == (0 if admitted else 1)
+        assert cp.placer.stats.preempted == (2 if admitted else 0)
+
+
+# ---------------------------------------------------------------------------
 # defragmentation
 # ---------------------------------------------------------------------------
 
