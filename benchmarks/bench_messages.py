@@ -11,9 +11,14 @@ message counts come from the unified ``Stats``.
 (``repro.service.regions``): it sweeps the regional plane over (R, fanout)
 on a tenant-skewed overload workload, recording weighted fair-share
 deviation, admission quality, per-round coordination messages (gossip +
-2PC) and gossip staleness against the centralized PR-3 plane.
-``python -m benchmarks.bench_messages --smoke`` writes the sweep +
-acceptance criteria to ``BENCH_messages.json`` (CI artifact).
+2PC), gossip staleness, and the **compacted solve size** (mean padded n
+per regional DP solve — n_r under the view substrate vs the global n the
+masked plane paid) against the centralized PR-3 plane.
+:func:`run_multi_hop` adds the multi-hop admission row: a line of regions
+where every request spans >= 3 regions, admitted via chained 2PC
+(previously dropped outright).  ``python -m benchmarks.bench_messages
+--smoke`` writes the sweep + acceptance criteria to
+``BENCH_messages.json`` (CI artifact).
 """
 from __future__ import annotations
 
@@ -128,6 +133,27 @@ def _skewed_workload(rg, assign, n_per_tenant, p, seed):
     return reqs
 
 
+def _solve_size(cp) -> dict:
+    """Mean padded node dimension per DP solve: the regional plane reads
+    its compacted substrate report; the centralized plane always solves
+    at the global n."""
+    if hasattr(cp, "solve_size_report"):
+        rep = cp.solve_size_report()
+        return {
+            "global_n": rep["global_n"],
+            "mean_solve_n": rep["mean_solve_n"],
+            "max_solve_n": rep["max_solve_n"],
+            "balanced_n_r": rep["balanced_n_r"],
+        }
+    st = cp.placer.stats
+    return {
+        "global_n": cp.placer.base.n,
+        "mean_solve_n": st.mean_solve_n,
+        "max_solve_n": cp.placer.base.n if st.solves else 0,
+        "balanced_n_r": cp.placer.base.n,
+    }
+
+
 def _drive_plane(cp, reqs, pumps):
     for i in range(max(len(reqs["gold"]), len(reqs["bronze"]))):
         for t in ("gold", "bronze"):
@@ -151,6 +177,59 @@ def _drive_plane(cp, reqs, pumps):
         "max_deviation": float(max(dev.values())),
         "admitted_fraction": led["active"] / max(led["submitted"], 1),
         "ledger": led,
+        "solve_size": _solve_size(cp),
+    }
+
+
+def run_multi_hop(
+    R: int = 6,
+    k: int = 4,
+    n_requests: int = 40,
+    pumps: int = 8,
+    seed: int = 9,
+    method: str = "leastcost_python",
+):
+    """Multi-hop admission on a line of R fully-connected regions.
+
+    Every request pins its endpoints at least two regions apart, so
+    nothing is placeable without a spanning chain of >= 3 regions —
+    exactly the workload the single-cut broker dropped outright.
+    Records the admission fraction, the chain-length distribution proxy
+    (max chain, multi-hop count) and the compacted solve sizes.
+    """
+    from repro.core import region_line
+    from repro.service import FairSharePolicy, RegionalControlPlane
+
+    rg, assign = region_line(R, k, seed=seed)
+    cp = RegionalControlPlane(
+        rg, regions=R, region_of=assign, fanout=2, seed=seed,
+        micro_batch=16, policy=FairSharePolicy(slack=0.4), method=method,
+    )
+    cp.register_tenant("gold", weight=3.0)
+    cp.register_tenant("bronze", weight=1.0)
+    rng = np.random.default_rng(seed)
+    for i in range(n_requests):
+        tenant = "gold" if i % 2 == 0 else "bronze"
+        r1 = int(rng.integers(0, R - 2))
+        r2 = int(rng.integers(r1 + 2, R))  # >= 2 regions apart: chain >= 3
+        src = int(rng.choice(np.nonzero(assign == r1)[0]))
+        dst = int(rng.choice(np.nonzero(assign == r2)[0]))
+        p = int(rng.integers(2, 6))
+        creq = rng.uniform(0.02, 0.15, p).astype(np.float32)
+        creq[0] = creq[-1] = 0.0
+        breq = rng.uniform(0.5, 2.0, p - 1).astype(np.float32)
+        cp.submit(tenant, DataflowPath(creq, breq, src, dst))
+    for _ in range(pumps):
+        cp.pump()
+    cp.check_invariants()
+    led = cp.conservation()
+    return {
+        "R": R, "k": k, "n": rg.n, "requests": n_requests, "pumps": pumps,
+        "admitted_fraction": led["active"] / max(led["submitted"], 1),
+        "ledger": led,
+        "spanning": dict(cp.span_stats),
+        "twopc_messages": cp.engine_stats().twopc_messages,
+        "solve_size": _solve_size(cp),
     }
 
 
@@ -178,6 +257,11 @@ def run_regional(
       plane's;
     - per-round gossip messages are exactly ``R * fanout`` — O(R*fanout),
       not O(n^2);
+    - every regional solve runs over the compacted substrate: mean/max
+      padded solve dimension <= ceil(n/R) + slack, never the global n;
+    - dataflows spanning >= 3 regions are admitted via multi-hop 2PC
+      (``run_multi_hop``; admission rate > 0 where the single-cut broker
+      dropped them);
     - R=1 bit-identity with the centralized plane is enforced separately
       in ``tests/test_regions.py`` (noted here for the record).
     """
@@ -222,11 +306,23 @@ def run_regional(
     # the fairness gate grades the most decentralized point with the most
     # gossip: largest R, then largest fanout, in whatever sweep ran
     gate = max(points, key=lambda x: (x["R"], x["fanout"]))
+    # solve-size gate: the compacted substrate must keep every regional
+    # solve at n_r <= ceil(n/R) + slack, never the global n
+    slack = 2
+    size_ok = all(
+        x["solve_size"]["mean_solve_n"]
+        <= x["solve_size"]["balanced_n_r"] + slack
+        and x["solve_size"]["max_solve_n"]
+        <= x["solve_size"]["balanced_n_r"] + slack
+        for x in points if x["R"] > 1
+    )
+    multi_hop = run_multi_hop(method=method)
     record = {
         "n": n, "p": p, "n_per_tenant": n_per_tenant, "pumps": pumps,
         "seed": seed, "method": method, "weights": {"gold": 3.0, "bronze": 1.0},
         "centralized": central,
         "sweep": points,
+        "multi_hop": multi_hop,
         "criterion": {
             "gate_point": {"R": gate["R"], "fanout": gate["fanout"]},
             "r4_fairness_within_15pct_of_centralized": bool(
@@ -239,6 +335,16 @@ def run_regional(
                 == pumps * x["R"] * min(x["fanout"], x["R"] - 1)
                 for x in points
             ),
+            "compacted_solve_n_le_balanced": bool(size_ok),
+            "solve_n_slack": slack,
+            "solve_size_reduction_at_gate": (
+                float(n) / max(gate["solve_size"]["mean_solve_n"], 1e-9)
+            ),
+            "multi_hop_admitted": bool(
+                multi_hop["admitted_fraction"] > 0
+                and multi_hop["spanning"]["max_chain"] >= 3
+            ),
+            "multi_hop_admitted_fraction": multi_hop["admitted_fraction"],
             "r1_bit_identity": "enforced in tests/test_regions.py",
         },
     }
@@ -264,9 +370,11 @@ if __name__ == "__main__":
         rec = run_regional()
     print(json.dumps(
         {"regional": {k: rec[k] for k in ("centralized", "criterion")},
+         "multi_hop": rec["multi_hop"],
          "sweep": [
-             {k: x[k] for k in ("R", "fanout", "max_deviation",
-                                "admitted_fraction",
-                                "gossip_messages_per_round")}
+             {"solve_n": x["solve_size"]["mean_solve_n"],
+              **{k: x[k] for k in ("R", "fanout", "max_deviation",
+                                   "admitted_fraction",
+                                   "gossip_messages_per_round")}}
              for x in rec["sweep"]
          ]}, indent=2))

@@ -1,40 +1,58 @@
 """Decentralized regional control plane, end to end.
 
-The network is sharded into 4 regions (``ControlPlane(rg, regions=4)``).
-Each region drains its own tenant queues against its own residual view;
-fair shares are enforced from *gossiped estimates* of what every tenant
-holds elsewhere (no global lock, R * fanout messages per round), and a
-dataflow whose endpoints straddle regions is decomposed at a cut edge and
-placed by a bounded two-phase commit.  A cut-link failure partitions a
-region pair — the spanning placement is displaced, queued, and re-admitted
-after the heal.
+A 6-region *line* topology (fully-connected 4-node regions, one gateway
+link between neighbors) is sharded with ``ControlPlane(rg, regions=6,
+region_of=...)``.  Each region drains its own tenant queues against its
+own **compacted** residual view — every regional DP solve runs over
+n_r = 4 nodes, never the global 24 (the view substrate of
+``repro.core.compact``) — and fair shares are enforced from *gossiped
+estimates* of what every tenant holds elsewhere (no global lock,
+R * fanout messages per round).
+
+A dataflow pinned from region 0 to region 2 has no direct cut edge: it is
+decomposed over the multi-hop region chain 0 -> 1 -> 2 (one gateway-pinned
+segment per region, region 1 possibly pure transit) and placed by ONE
+bounded two-phase commit — previously such requests retried until
+dropped.  A middle cut-link failure partitions the chain — the spanning
+placement is displaced, queued, and re-admitted after the heal.
 
 Run:  PYTHONPATH=src python examples/regional_service.py
 """
 import numpy as np
 
-from repro.core import DataflowPath, random_dataflow, waxman
+from repro.core import DataflowPath, region_line
 from repro.service import ControlPlane, FairSharePolicy, SpanningTicket
 
 
 def main():
-    rg = waxman(24, seed=11)
-    cp = ControlPlane(rg, regions=4, fanout=2, seed=0,
+    rg, assign = region_line(6, 4, seed=11)
+    cp = ControlPlane(rg, regions=6, region_of=assign, fanout=2, seed=0,
                       policy=FairSharePolicy(slack=0.4), micro_batch=16)
-    print(f"{cp.R} regions over {rg.n} nodes, "
+    print(f"{cp.R} regions in a line over {rg.n} nodes, "
           f"{len(cp.cut_base)} cut links "
-          f"(region sizes {np.bincount(cp.region_of).tolist()})")
+          f"(region sizes {np.bincount(cp.region_of).tolist()}, "
+          f"every solve compacted to n_r = "
+          f"{max(v.n_local for v in cp.views)})")
 
     cp.register_tenant("gold", weight=3.0)
     cp.register_tenant("bronze", weight=1.0)
 
-    # Overload both tenants; requests land in whatever region their random
-    # endpoints fall into — some straddle two regions.
+    # Overload both tenants with mixed-span work: in-region requests and
+    # requests straddling 2..4 regions along the line.
+    rng = np.random.default_rng(7)
     for i in range(60):
         for tenant in ("gold", "bronze"):
-            df = random_dataflow(rg, 4, seed=900 + 2 * i + (tenant == "gold"),
-                                 creq_range=(0.1, 0.4), breq_range=(0.5, 2.0))
-            cp.submit(tenant, df)
+            r1 = int(rng.integers(0, 6))
+            r2 = min(5, r1 + int(rng.integers(0, 4)))
+            src = int(rng.choice(np.nonzero(assign == r1)[0]))
+            dst = int(rng.choice(np.nonzero(assign == r2)[0]))
+            if src == dst:
+                continue
+            p = int(rng.integers(2, 5))
+            creq = rng.uniform(0.05, 0.3, p).astype(np.float32)
+            creq[0] = creq[-1] = 0.0
+            breq = rng.uniform(0.5, 2.0, p - 1).astype(np.float32)
+            cp.submit(tenant, DataflowPath(creq, breq, src, dst))
     for _ in range(8):
         cp.pump()
     cp.check_invariants()
@@ -42,36 +60,42 @@ def main():
     held = cp.committed_capacity()
     rep = cp.fairness_report()
     coord = cp.coordination_report()
+    size = coord["solve_size"]
     print(f"standing capacity  gold={held['gold']:.2f} "
           f"bronze={held['bronze']:.2f} "
           f"(weighted max-min deviation {rep['max_deviation']:.1%})")
     print(f"coordination: {coord['gossip_messages']} gossip msgs "
           f"({coord['gossip_messages_per_round']:.0f}/round = R*fanout), "
           f"{coord['twopc_messages']} 2PC msgs for "
-          f"{coord['spanning']['admitted']} spanning placements, "
-          f"gossip staleness <= {coord['max_staleness']} versions")
+          f"{coord['spanning']['admitted']} spanning placements "
+          f"(longest chain {coord['spanning']['max_chain']} regions, "
+          f"{coord['spanning']['multi_hop']} multi-hop)")
+    print(f"solve size: mean padded n per regional solve = "
+          f"{size['mean_solve_n']:.1f} (global n = {size['global_n']}; "
+          f"{size['global_n'] / size['mean_solve_n']:.0f}x smaller DP)")
 
-    # A dataflow pinned across a region boundary: placed by reserve ->
-    # commit on both sides of a cut edge.
-    (u, v) = max(cp.cut_base, key=cp.cut_base.get)
-    df = DataflowPath.make([0.2, 0.2], [1.0], src=u, dst=v)
+    # A dataflow pinned across THREE regions (0 -> 2): no direct cut edge
+    # exists, so it is decomposed over the region chain by multi-hop 2PC.
+    src = int(np.nonzero(assign == 0)[0][0])
+    dst = int(np.nonzero(assign == 2)[0][-1])
+    df = DataflowPath.make([0.0, 0.2, 0.2, 0.0], [1.0, 1.0, 1.0], src, dst)
     rid = cp.submit("gold", df)
-    spans = [t for t in cp.pump() if isinstance(t, SpanningTicket)]
+    spans = [t for t in cp.pump()
+             if isinstance(t, SpanningTicket) and t.rid == rid]
     if spans:
         st = spans[-1]
-        print(f"spanning rid {rid}: split at dataflow edge {st.split}, "
-              f"cut link {st.cut} "
-              f"(regions {int(cp.region_of[st.cut[0]])}->"
-              f"{int(cp.region_of[st.cut[1]])}), "
-              f"{st.cut_bw:.1f} bw reserved by 2PC")
+        print(f"spanning rid {rid}: chain {st.chain} "
+              f"(splits {st.splits}), cuts {st.cuts}, "
+              f"{[f'{b:.1f}' for b in st.cut_bws]} bw reserved by one 2PC")
 
-        # Partition the region pair: the spanning placement is displaced
-        # (never dropped), then heals and re-admits.
-        cp.fail_link(*st.cut)
+        # Partition the chain at its middle cut: the whole composite
+        # placement is displaced (never dropped), then heals + re-admits.
+        mid = st.cuts[len(st.cuts) // 2]
+        cp.fail_link(*mid)
         led = cp.conservation()
-        print(f"cut link failed: active={led['active']} "
+        print(f"middle cut {mid} failed: active={led['active']} "
               f"queued={led['queued']} dropped={led['dropped']}")
-        cp.restore_link(*st.cut)
+        cp.restore_link(*mid)
         cp.pump()
         print(f"healed: rid {rid} active again = "
               f"{rid in cp.active_ids()}")

@@ -2,6 +2,8 @@
 
 Public API:
   problem:     BIG sentinel + feasibility epsilons, shared precomputation
+  compact:     CompactedView — global<->local id bijection; region-local
+               compacted solves (n_r-sized tensors, read/write-through)
   graph:       ResourceGraph, DataflowPath, Mapping, validate_mapping
   engine:      solve / solve_batch — ONE entry point over every backend
   online:      OnlinePlacer — residual-capacity multi-request service
@@ -14,6 +16,7 @@ Public API:
   topology:    waxman / barabasi_albert (BRITE stand-ins), random_dataflow
 """
 from .problem import BIG  # noqa: F401
+from .compact import CompactedView, compact_view  # noqa: F401
 from .graph import (  # noqa: F401
     DataflowPath,
     Mapping,
@@ -38,5 +41,6 @@ from .topology import (  # noqa: F401
     barabasi_albert,
     paper_example,
     random_dataflow,
+    region_line,
     waxman,
 )

@@ -58,6 +58,11 @@ class Stats:
     virtual_time: float = 0.0  # simulator virtual completion time
     solve_ms: float = 0.0  # wall clock inside the backend
     batch_size: int = 1
+    # node dimension the solve actually ran over — the padded DP/kernel
+    # size.  Equals rg.n, or the region-local n_r when a CompactedView was
+    # passed: the compaction win the regional plane is graded on
+    # (bench_messages solve-size column).
+    solve_n: int = 0
     # service-layer counters (repro.service control plane): how much solver
     # work was spent displacing lower-class tickets / re-optimizing the
     # standing allocation, surfaced next to the per-solve numbers so a
@@ -127,9 +132,17 @@ def solve(
     rg: ResourceGraph,
     df: DataflowPath,
     method: str = "leastcost_jax",
+    view=None,
     **cfg,
 ) -> tuple[Optional[Mapping], Stats]:
-    """Solve one mapping request with the named backend."""
+    """Solve one mapping request with the named backend.
+
+    ``view`` (a :class:`~repro.core.compact.CompactedView`) makes this a
+    *region-local* solve: ``rg`` and ``df`` stay in global ids, but the
+    backend runs over the view's compacted ``n_r``-node slice and the
+    returned mapping is lifted back to global ids.  ``Stats.solve_n``
+    records the node dimension the backend actually saw.
+    """
     try:
         fn = _REGISTRY[method]
     except KeyError:
@@ -137,8 +150,16 @@ def solve(
             f"unknown mapper backend {method!r}; registered: {backends()}"
         ) from None
     t0 = time.perf_counter()
-    mapping, native = fn(rg, df, **cfg)
+    if view is not None and not view.is_identity:
+        mapping, native = fn(view.compact_graph(rg), view.compact_df(df), **cfg)
+        if mapping is not None:
+            mapping = view.uncompact_mapping(mapping)
+        solve_n = view.n_local
+    else:
+        mapping, native = fn(rg, df, **cfg)
+        solve_n = rg.n
     stats = _unify(native, method)
+    stats.solve_n = solve_n
     stats.solve_ms = 1e3 * (time.perf_counter() - t0)
     return mapping, stats
 
@@ -147,6 +168,7 @@ def solve_batch(
     rg: ResourceGraph,
     dfs: list[DataflowPath],
     method: str = "leastcost_jax",
+    view=None,
     **cfg,
 ) -> tuple[list[Optional[Mapping]], Stats]:
     """Solve many requests against one shared network.
@@ -157,10 +179,17 @@ def solve_batch(
     replaces the vmapped per-request graph (``Stats.kernel_impl`` records
     which implementation ran).  Every other backend falls back to a
     sequential loop through :func:`solve`.
+
+    ``view`` compacts the whole batch into the view's local id space
+    before solving (every request's endpoints must live in the view):
+    tiles pad to the region-local ``n_r``, mappings come back global.
     """
     if not dfs:
         return [], Stats(method=method, batch_size=0)
     t0 = time.perf_counter()
+    if view is not None and not view.is_identity:
+        rg = view.compact_graph(rg)
+        dfs = [view.compact_df(d) for d in dfs]
     if method in BATCHED_METHODS:
         from .leastcost import leastcost_jax_batched
 
@@ -179,6 +208,12 @@ def solve_batch(
             stats.validated &= st.validated
             stats.preemptions += st.preemptions
             stats.defrag_rounds += st.defrag_rounds
+    if view is not None and not view.is_identity:
+        mappings = [
+            view.uncompact_mapping(m) if m is not None else None
+            for m in mappings
+        ]
+    stats.solve_n = rg.n
     stats.batch_size = len(dfs)
     stats.solve_ms = 1e3 * (time.perf_counter() - t0)
     return mappings, stats

@@ -86,6 +86,15 @@ class OnlineStats:
     defrag_rounds: int = 0  # global re-optimization passes attempted
     defrag_commits: int = 0  # ... that improved the objective and committed
     solve_ms: float = 0.0
+    solves: int = 0  # DP solves issued (a micro-batch counts once)
+    solve_n_sum: int = 0  # summed padded node dimension of those solves
+
+    @property
+    def mean_solve_n(self) -> float:
+        """Mean padded node dimension per DP solve — the number the
+        compacted regional substrate shrinks from the global ``n`` to the
+        region-local ``n_r`` (bench_messages solve-size column)."""
+        return self.solve_n_sum / self.solves if self.solves else 0.0
 
 
 def _edge_loads(df: DataflowPath, mapping: Mapping) -> dict:
@@ -118,13 +127,29 @@ class OnlinePlacer:
         *,
         method: str = "leastcost_jax",
         use_kernel: bool = False,
+        view=None,
         **solve_cfg,
     ):
         """``use_kernel=True`` serves admissions through the fused batched
         Pallas DP path (``kernels/minplus/batched``; Pallas on TPU, its
         fused-jnp mirror elsewhere) — both micro-batched ``admit_many`` and
         single-request ``admit`` re-solves take it.  Extra ``solve_cfg``
-        (e.g. ``tiles`` or ``kernel_impl``) is forwarded to the backend."""
+        (e.g. ``tiles`` or ``kernel_impl``) is forwarded to the backend.
+
+        ``view`` (a :class:`~repro.core.compact.CompactedView`) makes this
+        a *region-local* placer: ``rg`` may be the global graph — it is
+        compacted through the view up front, so every piece of state
+        (residual arrays, liveness masks, tickets, routes) and every DP
+        solve/kernel tile lives at the region-local ``n_r``, never the
+        global ``n``.  All dataflows passed to ``admit*`` must already be
+        in the view's local id space (``view.compact_df``); owners of
+        global id spaces (the regional 2PC broker) translate at their
+        boundary and can read the bijection back from ``placer.view``.
+        """
+        self.view = view
+        if view is not None:
+            rg = view.compact_graph(rg) if rg.n == view.n_global else rg
+            assert rg.n == view.n_local, "graph does not match the view"
         self.base = rg
         self.method = method
         if use_kernel:
@@ -250,6 +275,8 @@ class OnlinePlacer:
         rg = self.residual_graph()
         mapping, st = engine.solve(rg, df, method=self.method, **self.solve_cfg)
         self.stats.solve_ms += st.solve_ms
+        self.stats.solves += 1
+        self.stats.solve_n_sum += st.solve_n
         if not self._admissible(df, mapping, rg):
             self.stats.rejected += 1
             return None
@@ -322,9 +349,14 @@ class OnlinePlacer:
                 # probe rejections along the way are not real rejections
                 self.stats.rejected = rejected0
                 return t, preempted
-        solve_ms = self.stats.solve_ms  # probes did real solver work
+        # probes did real solver work: keep the solve accounting across the
+        # rollback (state restores, wall-clock and solve counts do not)
+        solve_ms, solves, solve_n_sum = (
+            self.stats.solve_ms, self.stats.solves, self.stats.solve_n_sum)
         self.restore(snap)
         self.stats.solve_ms = solve_ms
+        self.stats.solves = solves
+        self.stats.solve_n_sum = solve_n_sum
         return None, []
 
     def admit_many(
@@ -357,6 +389,8 @@ class OnlinePlacer:
             snapshot, list(dfs), method=self.method, **cfg
         )
         self.stats.solve_ms += st.solve_ms
+        self.stats.solves += 1
+        self.stats.solve_n_sum += st.solve_n
         out: list[Optional[Ticket]] = []
         current = snapshot  # refreshed only on commit (the only mutation)
         for df, m, (tenant, klass) in zip(dfs, mappings, metas):

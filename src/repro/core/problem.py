@@ -64,7 +64,14 @@ def finite_lat(rg: ResourceGraph) -> np.ndarray:
 
 
 def problem_tensors(rg: ResourceGraph, df: DataflowPath) -> dict:
-    """Dense float32 tensors for the DP/kernels. INF replaced by BIG."""
+    """Dense float32 tensors for the DP/kernels. INF replaced by BIG.
+
+    Region-local (compacted) problems reach here already sized ``n_r``:
+    ``engine.solve(view=...)`` and ``OnlinePlacer(view=...)`` compact the
+    graph/request up front, and :func:`stack_requests` accepts a ``view``
+    for direct batched-tensor callers — one compaction path, owned by
+    :mod:`repro.core.compact`.
+    """
     import jax.numpy as jnp  # deferred: numpy-only callers never touch jax
 
     s = creq_prefix(df).astype(np.float32)
@@ -99,7 +106,7 @@ def pad_request(df: DataflowPath, p_max: int) -> tuple[np.ndarray, np.ndarray]:
 
 
 def stack_requests(rg: ResourceGraph, dfs: list[DataflowPath],
-                   pad_to: int | None = None) -> tuple[dict, int]:
+                   pad_to: int | None = None, *, view=None) -> tuple[dict, int]:
     """Stack mixed-``p`` requests against one shared resource network into
     the batched tensor dict for the batched DP.  Returns (tensors, p_max);
     link matrices are shared (axis None under vmap), per-request tensors are
@@ -110,10 +117,17 @@ def stack_requests(rg: ResourceGraph, dfs: list[DataflowPath],
     micro-batches to powers of two this way so a churning arrival process
     compiles at most log2(max batch) DP specializations per request shape.
     Callers must ignore results beyond ``len(dfs)``.
+
+    ``view`` compacts a global problem into the view's local id space: the
+    node dimension of every stacked tensor pads to the region-local
+    ``n_r``, not the global ``n`` (see :mod:`repro.core.compact`).
     """
     import jax.numpy as jnp
 
     assert dfs
+    if view is not None:
+        rg = view.compact_graph(rg)
+        dfs = [view.compact_df(d) for d in dfs]
     reqs = list(dfs)
     if pad_to is not None:
         assert pad_to >= len(reqs)

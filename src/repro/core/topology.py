@@ -100,6 +100,53 @@ def barabasi_albert(n: int, *, m: int = 2, seed: int = 0, **annotate_kw) -> Reso
     return _annotate(rng, pos, adj, **annotate_kw)
 
 
+def region_line(
+    R: int,
+    k: int = 4,
+    *,
+    cap_range=(2.0, 10.0),
+    bw_range=(10.0, 100.0),
+    lat_intra: float = 1.0,
+    lat_inter: float = 5.0,
+    gateways: int = 1,
+    seed: int = 0,
+) -> tuple[ResourceGraph, np.ndarray]:
+    """A line of ``R`` fully-connected ``k``-node regions.
+
+    Consecutive regions are joined by ``gateways`` inter-region links
+    (node ``k-1-g`` of region ``r`` to node ``g`` of region ``r+1``), so a
+    dataflow pinned from region 0 to region ``R-1`` can only be served by
+    a spanning chain through every region in between — the multi-hop
+    decomposition scenario of the regional control plane.  Returns
+    ``(graph, assign)`` where ``assign`` is the canonical node -> region
+    map (pass it as ``RegionalControlPlane(region_of=assign)`` to pin the
+    partition to the topology).
+    """
+    assert R >= 1 and k >= 1 and 1 <= gateways <= k
+    rng = np.random.default_rng(seed)
+    n = R * k
+    cap = rng.uniform(*cap_range, size=n).astype(np.float32)
+    bw = np.zeros((n, n), np.float32)
+    lat = np.full((n, n), INF, np.float32)
+    np.fill_diagonal(lat, 0.0)
+
+    def _link(u, v, l):
+        b = float(rng.uniform(*bw_range))
+        bw[u, v] = bw[v, u] = b
+        lat[u, v] = lat[v, u] = l
+
+    for r in range(R):
+        base = r * k
+        for i in range(k):
+            for j in range(i + 1, k):
+                _link(base + i, base + j, lat_intra)
+        if r + 1 < R:
+            for g in range(gateways):
+                _link(base + (k - 1 - g), base + k + g, lat_inter)
+    assign = np.repeat(np.arange(R, dtype=np.int64), k)
+    return ResourceGraph(cap, bw, lat), assign
+
+
 def random_dataflow(
     rg: ResourceGraph,
     p: int,

@@ -11,21 +11,27 @@ front ends:
   defrag:       atomic global re-optimization of the standing ticket set
   gossip:       GossipBus — push-gossip of versioned per-region share
                 estimates (R * fanout messages per round)
-  regions:      RegionalControlPlane — R sharded planes coordinated only
-                by gossip + bounded 2PC over cut edges; constructed by
-                ``ControlPlane(rg, regions=R)``, bit-identical to the
-                centralized plane at R = 1
+  regions:      RegionalControlPlane — R sharded planes over compacted
+                region-local subgraphs (core.compact views: every solve
+                sized n_r, not n), coordinated only by gossip + one
+                bounded 2PC per spanning dataflow over its multi-hop
+                region chain; constructed by ``ControlPlane(rg,
+                regions=R)``, bit-identical to the centralized plane at
+                R = 1
 """
 from .controlplane import ControlPlane, Request, TenantState  # noqa: F401
 from .defrag import DefragResult, defrag, global_objective  # noqa: F401
 from .gossip import GossipBus, ShareRecord  # noqa: F401
 from .regions import (  # noqa: F401
     RegionalControlPlane,
+    SpanPart,
     SpanningTicket,
     cut_edges,
     partition_regions,
     region_subgraph,
     split_dataflow,
+    split_dataflow_chain,
+    validate_region_of,
 )
 from .policy import (  # noqa: F401
     CLASS_BEST_EFFORT,
@@ -33,6 +39,7 @@ from .policy import (  # noqa: F401
     CLASS_STANDARD,
     FairSharePolicy,
     TenantConfig,
+    fairness_summary,
     maxmin_shares,
     may_preempt,
 )

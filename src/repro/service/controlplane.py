@@ -81,11 +81,19 @@ class ControlPlane:
     """
 
     def __new__(cls, rg=None, *args, regions: int = 1, **kwargs):
-        if cls is ControlPlane and int(regions) > 1:
+        regional = int(regions) > 1 or kwargs.get("region_of") is not None
+        if cls is ControlPlane and regional:
             from .regions import RegionalControlPlane
 
-            # not a ControlPlane subclass, so __init__ below is not re-run
-            return RegionalControlPlane(rg, regions=regions, **kwargs)
+            # not a ControlPlane subclass, so __init__ below is not re-run.
+            # A caller-pinned region_of alone implies the regional plane
+            # (its region count comes from the assignment); an explicit
+            # regions= is cross-checked against it there.
+            return RegionalControlPlane(
+                rg,
+                regions=int(regions) if int(regions) > 1 else None,
+                **kwargs,
+            )
         return super().__new__(cls)
 
     def __init__(
@@ -100,11 +108,17 @@ class ControlPlane:
         preempt_budget: Optional[float] = None,
         method: str = "leastcost_jax",
         use_kernel: bool = False,
+        view=None,
         **solve_cfg,
     ):
+        """``view`` (a :class:`~repro.core.compact.CompactedView`) makes
+        this a *region-local* plane: the placer compacts ``rg`` through it
+        so all state and every solve is sized to the view's ``n_r``; all
+        submitted dataflows must already be in the view's local id space
+        (the regional broker translates at its boundary)."""
         assert int(regions) <= 1, "regions > 1 is dispatched in __new__"
         self.placer = OnlinePlacer(
-            rg, method=method, use_kernel=use_kernel, **solve_cfg
+            rg, method=method, use_kernel=use_kernel, view=view, **solve_cfg
         )
         self.policy = policy or FairSharePolicy()
         self.micro_batch = int(micro_batch)
@@ -358,6 +372,14 @@ class ControlPlane:
             if rid is not None:
                 req, _ = self.active[rid]
                 self.active[rid] = (req, nt)
+        # a dropped ticket with no local rid is foreign work reserved here
+        # directly (a spanning segment owned by the regional broker): hand
+        # it to the owner BEFORE the rescue pass, so the broker can tear
+        # down the rest of the composite placement instead of leaking its
+        # sibling reservations (the partial-teardown regression)
+        foreign = [t for t in dropped if self._rid_of_tid.get(t.tid) is None]
+        if foreign and self.on_foreign_preempt is not None:
+            self.on_foreign_preempt(foreign)
         rescued: list[Ticket] = []
         requeued: list[Ticket] = []
         to_requeue: list[Request] = []
@@ -466,35 +488,15 @@ class ControlPlane:
         return s
 
     def fairness_report(self) -> dict:
-        """Actual standing shares vs weighted max-min targets.
+        """Actual standing shares vs weighted max-min targets (the shared
+        :func:`policy.fairness_summary` definition)."""
+        from .policy import fairness_summary
 
-        Shares are taken over the *observed* committed total (the network
-        decides what fits; the policy only divides it), and targets come
-        from :func:`policy.maxmin_shares` with each tenant's demand =
-        committed + queued — a tenant demanding less than its share keeps
-        only its demand, the rest is redistributed by weight.
-        """
-        from .policy import maxmin_shares
-
-        held = self.committed_capacity()
-        queued = self.queued_demand()
-        total = sum(held.values())
-        demands = {t: held[t] + queued[t] for t in self.tenants}
-        weights = {t: st.cfg.weight for t, st in self.tenants.items()}
-        target = maxmin_shares(demands, weights, total)
-        deviation = {
-            t: abs(held[t] - target[t]) / target[t]
-            for t in self.tenants
-            if target[t] > 1e-9
-        }
-        return {
-            "committed": held,
-            "queued_demand": queued,
-            "total_committed": total,
-            "target_shares": target,
-            "deviation": deviation,
-            "max_deviation": max(deviation.values(), default=0.0),
-        }
+        return fairness_summary(
+            self.committed_capacity(),
+            self.queued_demand(),
+            {t: st.cfg.weight for t, st in self.tenants.items()},
+        )
 
     def check_invariants(self) -> None:
         """Placer conservation + the control-plane ledger."""

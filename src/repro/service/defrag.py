@@ -115,10 +115,13 @@ def defrag(
         obj_after = global_objective(placer)
 
     repacked = ok and obj_after > obj_before
-    solve_ms = placer.stats.solve_ms  # speculative solves did real work
+    # speculative solves did real work: solve accounting survives rollback
+    solve_ms = placer.stats.solve_ms
+    solves, solve_n_sum = placer.stats.solves, placer.stats.solve_n_sum
     if not repacked:
         placer.restore(snap)
         placer.stats.solve_ms = solve_ms
+        placer.stats.solves, placer.stats.solve_n_sum = solves, solve_n_sum
         # fallback: keep the standing placement, retry the extras on the
         # current residual (probe rejections are not service rejections)
         readmitted = _admit_extras()
@@ -140,6 +143,7 @@ def defrag(
     # release/re-admit churn vanishes and only the net effect remains
     stats = dataclasses.replace(snap["stats"])
     stats.solve_ms = solve_ms
+    stats.solves, stats.solve_n_sum = solves, solve_n_sum
     stats.admitted += len(readmitted)
     stats.defrag_rounds += 1
     stats.defrag_commits += 1

@@ -90,6 +90,39 @@ def may_preempt(victim_klass: int, aggressor_klass: int) -> bool:
     return victim_klass < aggressor_klass
 
 
+def fairness_summary(
+    held: Mapping[str, float],
+    queued: Mapping[str, float],
+    weights: Mapping[str, float],
+) -> dict:
+    """Actual standing shares vs weighted max-min targets — the single
+    definition both the centralized and the regional plane report (and
+    that the CI fairness gates compare between them).
+
+    Shares are taken over the *observed* committed total (the network
+    decides what fits; the policy only divides it) and targets come from
+    :func:`maxmin_shares` with each tenant's demand = committed + queued —
+    a tenant demanding less than its share keeps only its demand, the
+    rest is redistributed by weight."""
+    held = dict(held)
+    total = sum(held.values())
+    demands = {t: held[t] + queued[t] for t in held}
+    target = maxmin_shares(demands, weights, total)
+    deviation = {
+        t: abs(held[t] - target[t]) / target[t]
+        for t in held
+        if target[t] > 1e-9
+    }
+    return {
+        "committed": held,
+        "queued_demand": dict(queued),
+        "total_committed": total,
+        "target_shares": target,
+        "deviation": deviation,
+        "max_deviation": max(deviation.values(), default=0.0),
+    }
+
+
 class FairSharePolicy:
     """Weighted max-min scheduler over per-tenant FIFO queues.
 

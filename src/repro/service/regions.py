@@ -1,5 +1,6 @@
 """Decentralized regional control plane: sharded queues, gossiped shares,
-and bounded two-phase commit for region-spanning dataflows.
+compacted region-local solves, and bounded two-phase commit for
+region-spanning dataflows decomposed over multi-hop region chains.
 
 The paper argues mapping should be computable *without* aggregating global
 network state at one node.  PR 3's :class:`ControlPlane` still held a
@@ -7,11 +8,17 @@ global view; this module shards it.  ``ControlPlane(rg, regions=R)``
 builds a :class:`RegionalControlPlane`:
 
 - the network is partitioned into R balanced, BFS-grown regions
-  (:func:`partition_regions`); each region owns a full centralized
-  :class:`ControlPlane` over its subgraph (:func:`region_subgraph`) —
-  its own tenant queues, residual view, and ``OnlinePlacer``.  Composition
-  makes ``R = 1`` the *bit-identical* degenerate case: one region, the
-  whole graph, no broker in the path.
+  (:func:`partition_regions`, or a caller-pinned ``region_of``
+  assignment); each region owns a full centralized :class:`ControlPlane`
+  over its **compacted** subgraph: a
+  :class:`~repro.core.compact.CompactedView` remaps the region's nodes
+  onto the contiguous local id space ``[0, n_r)``, so every piece of
+  regional state — residual arrays, liveness masks, tickets, DP state,
+  kernel tiles — is sized ``n_r``, not the global ``n``.  R regions are
+  R x smaller solves, not just R x smaller mailboxes.  Composition makes
+  ``R = 1`` the *bit-identical* degenerate case: the identity view
+  translates by returning its inputs unchanged, so one region runs the
+  centralized plane's exact objects.
 - regions never read each other's live accounting.  A
   :class:`~repro.service.gossip.GossipBus` spreads versioned per-tenant
   committed-share / residual estimates on a configurable fanout & period
@@ -21,40 +28,47 @@ builds a :class:`RegionalControlPlane`:
   estimates can only skew drain order — admission always validates
   against the region's own residual, so capacity is never over-committed
   (property-tested with maximally stale gossip in ``tests/test_regions``).
-- a request whose endpoints live in different regions is decomposed at a
-  *cut edge*: dataflow nodes ``0..s`` become a segment pinned to the cut's
-  tail gateway in the source region, nodes ``s+1..p-1`` a segment pinned
-  to the head gateway in the destination region, and the cut link carries
-  dataflow edge ``s`` (:func:`split_dataflow`).  The broker tries at most
-  ``max_cut_attempts`` (split, cut-edge) candidates — splits ordered by
-  compute balance, cuts by latency — and places each candidate with a
-  bounded two-phase commit: reserve the segments in their regions
-  (optionally preempting strictly-lower classes under the
-  ``preempt_budget`` displaced-cost cap), reserve the cut bandwidth, then
-  commit — or roll every reservation back.  2PC traffic is counted in
-  ``Stats.twopc_messages``; gossip in ``Stats.gossip_messages``.
+- a request whose endpoints live in different regions is decomposed over
+  a **region chain**: the fewest-hop path from the source region to the
+  destination region over the quotient graph of regions (edges = alive
+  cut links), possibly through intermediate regions.  The dataflow is cut
+  at one edge per hop (:func:`split_dataflow_chain`) into one
+  gateway-pinned segment per region on the chain; the broker tries at
+  most ``max_cut_attempts`` (splits, cut-edges) candidates — splits
+  ordered by compute balance across the segments, cuts by latency — and
+  places each candidate with ONE bounded two-phase commit: reserve every
+  segment in its region (the single blocker may escalate to budgeted
+  class preemption, only as the candidate's *last* reservation), reserve
+  every cut's bandwidth, then commit — or roll every reservation back.
+  A candidate costs at most ``2 * len(chain) + 2`` messages; 2PC traffic
+  is counted in ``Stats.twopc_messages``, gossip in
+  ``Stats.gossip_messages``.
 
-The per-region subgraphs keep *global* node ids (out-of-region capacity
-masked to zero, links removed): tickets, routes and failure injection use
-one id space, and cross-region conservation stays checkable.  A
-production plane would compact each subgraph; the subject here is the
-coordination structure and its message complexity, not per-region FLOPs.
+The broker is the only holder of global node ids: regional tickets live
+in their region's local id space, and every spanning reservation is
+recorded as a :class:`SpanPart` — ``(region, tid, local segment,
+bijection version)`` — so a handle minted under a stale view generation
+is detectable.  Cross-region (cut) links belong to no region; their
+bandwidth is the broker's own conservation ledger.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import itertools
+import math
 from typing import Optional
 
 import numpy as np
 
 from ..core import engine
+from ..core.compact import CompactedView
 from ..core.graph import INF, DataflowPath, ResourceGraph
 from ..core.online import Ticket
 from .controlplane import ControlPlane, Request, TenantState
 from .gossip import GossipBus
-from .policy import FairSharePolicy, TenantConfig, maxmin_shares
+from .policy import FairSharePolicy, TenantConfig, fairness_summary
 
 _EPS = 1e-9
 
@@ -71,9 +85,14 @@ def partition_regions(rg: ResourceGraph, R: int, *, seed: int = 0) -> np.ndarray
     one node per sweep — sizes differ by at most one.  A region whose
     frontier is exhausted (disconnected remainder) grabs the
     lowest-indexed unassigned node, so every node is always assigned.
-    Deterministic for a fixed (graph, R, seed).
+    Deterministic for a fixed (graph, R, seed).  Every region is
+    guaranteed non-empty (R is clamped to ``n``; each region owns its
+    seed node) — an empty region raises instead of failing downstream in
+    view construction.
     """
     n = rg.n
+    if n == 0:
+        raise ValueError("cannot partition an empty resource graph (n=0)")
     R = max(1, min(int(R), n))
     if R == 1:
         return np.zeros(n, np.int64)
@@ -103,13 +122,51 @@ def partition_regions(rg: ResourceGraph, R: int, *, seed: int = 0) -> np.ndarray
             unassigned -= 1
             if not unassigned:
                 break
+    counts = np.bincount(assign, minlength=R)
+    if counts.min() == 0:  # unreachable with seeded growth; fail loudly
+        raise ValueError(
+            f"partition produced an empty region (n={n}, R={R}, "
+            f"sizes={counts.tolist()}); use fewer regions"
+        )
+    return assign
+
+
+def validate_region_of(rg: ResourceGraph, region_of) -> np.ndarray:
+    """Validate a caller-supplied node -> region assignment: one id per
+    node, contiguous region ids ``0..R-1``, every region non-empty.
+    Raises a clear ``ValueError`` instead of letting view construction
+    fail downstream."""
+    assign = np.asarray(region_of, np.int64)
+    if assign.shape != (rg.n,):
+        raise ValueError(
+            f"region_of must map every node: expected shape ({rg.n},), "
+            f"got {assign.shape}"
+        )
+    if rg.n == 0:
+        raise ValueError("cannot shard an empty resource graph (n=0)")
+    if assign.min() < 0:
+        raise ValueError("region_of contains negative region ids")
+    R = int(assign.max()) + 1
+    counts = np.bincount(assign, minlength=R)
+    empty = np.nonzero(counts == 0)[0]
+    if empty.size:
+        raise ValueError(
+            f"region_of leaves region(s) {empty.tolist()} empty "
+            f"(region ids must be contiguous 0..{R - 1} and every region "
+            "must own at least one node); merge or renumber the regions"
+        )
     return assign
 
 
 def region_subgraph(rg: ResourceGraph, assign: np.ndarray, r: int) -> ResourceGraph:
-    """The subgraph region ``r`` owns, in the global id space: out-of-region
-    nodes keep their ids but lose all capacity and links.  With one region
-    this reproduces ``rg`` exactly (the R=1 identity hinges on it)."""
+    """The subgraph region ``r`` owns, in the *global* id space:
+    out-of-region nodes keep their ids but lose all capacity and links.
+
+    Superseded on the control-plane path by
+    :class:`~repro.core.compact.CompactedView` (which drops foreign rows
+    entirely instead of masking them, so solves run at ``n_r``); kept as
+    the masking reference the compacted substrate is equivalence-tested
+    against."""
     mine = assign == r
     pair = mine[:, None] & mine[None, :]
     cap = np.where(mine, rg.cap, 0.0).astype(np.float32)
@@ -126,25 +183,79 @@ def cut_edges(rg: ResourceGraph, assign: np.ndarray) -> list[tuple[int, int]]:
     ]
 
 
+def split_dataflow_chain(
+    df: DataflowPath,
+    splits,
+    gates,
+) -> list[DataflowPath]:
+    """Decompose ``df`` along a region chain: cut at dataflow edges
+    ``splits[0] <= ... <= splits[m-1]``, hop ``i`` crossing the cut link
+    ``gates[i] = (u_i, v_i)``.  Segment ``i`` holds dataflow nodes
+    ``splits[i-1]+1 .. splits[i]`` (sentinels -1 / p-1), pinned from the
+    inbound head gateway ``v_{i-1}`` (``df.src`` for the first) to the
+    outbound tail gateway ``u_i`` (``df.dst`` for the last); cut ``i``
+    carries ``breq[splits[i]]``.
+
+    Segments are pinned to the gateways through **ghost endpoints**: a
+    zero-compute dataflow node at the in/out gateway, joined to the
+    segment's real boundary node by an edge carrying the cut dataflow
+    edge's bandwidth — so the in-region transport from wherever the
+    boundary node is placed to the gateway is reserved honestly, and no
+    dataflow node is forced to sit *at* a gateway.  Equal consecutive
+    splits make the region between them a pure **transit** region: no
+    real dataflow node, just the two ghost gateway endpoints and the one
+    carried edge (a single ghost node when both gateways coincide).
+    Transit is what admits a short dataflow between non-adjacent regions
+    (e.g. p = 2 across a 3-region chain).  Endpoints stay in global ids —
+    the broker compacts each segment into its region's local space at
+    reserve time.
+    """
+    p = df.p
+    m = len(splits)
+    bounds = [-1] + list(splits) + [p - 1]
+    segs = []
+    for i in range(len(bounds) - 1):
+        lo, hi = bounds[i] + 1, bounds[i + 1]
+        if lo > hi:  # transit: carries dataflow edge splits[i-1] only
+            u, v = int(gates[i - 1][1]), int(gates[i][0])
+            carried = float(df.breq[splits[i - 1]])
+            if u == v:
+                segs.append(DataflowPath(
+                    np.zeros(1, np.float32), np.zeros(0, np.float32), u, v))
+            else:
+                segs.append(DataflowPath(
+                    np.zeros(2, np.float32),
+                    np.asarray([carried], np.float32), u, v))
+            continue
+        creq = list(np.asarray(df.creq[lo:hi + 1], np.float64))
+        breq = list(np.asarray(df.breq[lo:hi], np.float64))
+        if i == 0:
+            src = int(df.src)
+        else:  # ghost at the inbound head gateway, carrying the cut edge
+            src = int(gates[i - 1][1])
+            creq = [0.0] + creq
+            breq = [float(df.breq[splits[i - 1]])] + breq
+        if i == m:
+            dst = int(df.dst)
+        else:  # ghost at the outbound tail gateway, carrying the cut edge
+            dst = int(gates[i][0])
+            creq = creq + [0.0]
+            breq = breq + [float(df.breq[splits[i]])]
+        segs.append(DataflowPath(
+            np.asarray(creq, np.float32), np.asarray(breq, np.float32),
+            src, dst,
+        ))
+    return segs
+
+
 def split_dataflow(
     df: DataflowPath, s: int, u: int, v: int
 ) -> tuple[DataflowPath, DataflowPath]:
-    """Decompose ``df`` at dataflow edge ``s`` across the cut link (u, v):
-    nodes ``0..s`` stay in the source region with node ``s`` pinned to the
-    tail gateway ``u``; nodes ``s+1..p-1`` go to the destination region
-    with node ``s+1`` pinned to the head gateway ``v``; the cut link
-    carries ``breq[s]``."""
-    seg_a = DataflowPath(
-        np.asarray(df.creq[: s + 1], np.float32),
-        np.asarray(df.breq[:s], np.float32),
-        int(df.src), int(u),
-    )
-    seg_b = DataflowPath(
-        np.asarray(df.creq[s + 1:], np.float32),
-        np.asarray(df.breq[s + 1:], np.float32),
-        int(v), int(df.dst),
-    )
-    return seg_a, seg_b
+    """Single-cut decomposition at dataflow edge ``s`` across the cut
+    link (u, v) — the chain of length 2 (see
+    :func:`split_dataflow_chain`)."""
+    a, b = split_dataflow_chain(df, [s], [(u, v)])
+    return a, b
 
 
 # ---------------------------------------------------------------------------
@@ -152,19 +263,35 @@ def split_dataflow(
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class SpanPart:
+    """One reserved segment of a spanning placement: the owning region,
+    the region-local ticket id, the *local-id* segment object the
+    region's ticket holds (identity-checked by the invariants), and the
+    region view's bijection version at reserve time — a part minted under
+    an older generation than the view's current one is a churn survivor,
+    and one minted under a newer-than-current version is a bug."""
+
+    region: int
+    tid: int
+    seg: DataflowPath
+    version: int
+
+
 @dataclasses.dataclass(eq=False)
 class SpanningTicket:
-    """Composite handle for a cross-region placement: one reserved segment
-    per region plus the cut-bandwidth reservation.  ``parts`` hold tids,
-    not Ticket objects — region defrag re-keys tickets under stable tids,
-    so the handle survives re-optimization."""
+    """Composite handle for a cross-region placement: one reserved
+    segment per region on the chain plus one cut-bandwidth reservation
+    per hop.  ``parts`` hold (region, tid) pairs, not Ticket objects —
+    region defrag re-keys tickets under stable tids, so the handle
+    survives re-optimization."""
 
     rid: int
     req: Request
-    parts: list[tuple[int, int, DataflowPath]]  # (region, tid, segment)
-    cut: tuple[int, int]
-    cut_bw: float
-    split: int  # dataflow edge index carried by the cut link
+    parts: list[SpanPart]  # ordered along the region chain
+    cuts: list[tuple[int, int]]  # global gateway pairs, one per hop
+    cut_bws: list[float]
+    splits: list[int]  # dataflow edge indices carried by the cuts
 
     @property
     def tenant(self) -> str:
@@ -178,16 +305,37 @@ class SpanningTicket:
     def df(self) -> DataflowPath:
         return self.req.df
 
+    @property
+    def chain(self) -> list[int]:
+        """The ordered region chain this placement spans."""
+        return [p.region for p in self.parts]
+
+    # single-cut convenience (the chain-of-2 common case)
+    @property
+    def cut(self) -> tuple[int, int]:
+        return self.cuts[0]
+
+    @property
+    def cut_bw(self) -> float:
+        return self.cut_bws[0]
+
+    @property
+    def split(self) -> int:
+        return self.splits[0]
+
 
 class RegionalControlPlane:
-    """R sharded control planes + gossip + a cut-edge 2PC broker.
+    """R sharded control planes + gossip + a multi-hop cut-edge 2PC broker.
 
     Mirrors the centralized :class:`ControlPlane` surface (register_tenant
     / submit / pump / release / fail_* / restore_* / defrag /
     committed_capacity / conservation / fairness_report / engine_stats /
     check_invariants / active_ids), so call sites are plane-agnostic.
-    ``pump`` returns a mix of :class:`Ticket` (in-region) and
-    :class:`SpanningTicket` (cross-region) handles; ``defrag`` returns one
+    ``pump`` returns a mix of :class:`Ticket` (in-region; their
+    mappings/routes are in the owning region's *local* id space —
+    resolve the owner with :meth:`owner_region` and lift through
+    ``plane.views[r]``) and :class:`SpanningTicket` (cross-region,
+    global gateways) handles; ``defrag`` returns one
     :class:`~repro.service.defrag.DefragResult` per region — there is no
     global re-solve, by design.
     """
@@ -196,7 +344,8 @@ class RegionalControlPlane:
         self,
         rg: ResourceGraph,
         *,
-        regions: int = 2,
+        regions: Optional[int] = None,
+        region_of=None,
         policy: Optional[FairSharePolicy] = None,
         micro_batch: int = 32,
         max_attempts: int = 8,
@@ -211,7 +360,21 @@ class RegionalControlPlane:
         **solve_cfg,
     ):
         self.base = rg
-        self.region_of = partition_regions(rg, regions, seed=seed)
+        if region_of is not None:
+            # caller-pinned partition (e.g. a line-of-regions topology
+            # whose canonical assignment the BFS grower would not find);
+            # the region count comes from the assignment, and an
+            # explicitly contradicting regions= fails fast
+            self.region_of = validate_region_of(rg, region_of)
+            detected = int(self.region_of.max()) + 1
+            if regions is not None and int(regions) != detected:
+                raise ValueError(
+                    f"regions={regions} contradicts region_of, which "
+                    f"defines {detected} regions"
+                )
+        else:
+            self.region_of = partition_regions(
+                rg, 2 if regions is None else regions, seed=seed)
         self.R = int(self.region_of.max()) + 1
         self.policy = policy or FairSharePolicy()
         self.micro_batch = int(micro_batch)
@@ -220,9 +383,16 @@ class RegionalControlPlane:
         self.preempt_budget = preempt_budget
         self.method = method
         self.max_cut_attempts = int(max_cut_attempts)
+        # the compacted solve substrate: one global<->local bijection per
+        # region; every regional plane below is sized n_r, not n
+        self.views = [
+            CompactedView.from_assign(rg, self.region_of, r)
+            for r in range(self.R)
+        ]
         self.regions = [
             ControlPlane(
-                region_subgraph(rg, self.region_of, r),
+                rg,
+                view=self.views[r],
                 policy=self.policy,
                 micro_batch=micro_batch,
                 max_attempts=max_attempts,
@@ -235,8 +405,9 @@ class RegionalControlPlane:
             for r in range(self.R)
         ]
         for r, cp in enumerate(self.regions):
-            # an in-region preemption rescue may evict a spanning segment;
-            # the broker must then tear down its sibling reservations
+            # an in-region preemption OR churn re-map may displace/drop a
+            # spanning segment; the broker must then tear down its sibling
+            # reservations (the region plane hands over every foreign tid)
             cp.on_foreign_preempt = (
                 lambda tickets, r=r: [
                     self._displace_span_part(r, t) for t in tickets
@@ -251,7 +422,9 @@ class RegionalControlPlane:
         self.gossip_period = max(1, int(gossip_period))
         self.node_up = np.ones(rg.n, bool)
 
-        # cut-edge bandwidth ledger: owned by the broker, reserved by 2PC
+        # cut-edge bandwidth ledger: owned by the broker, reserved by 2PC.
+        # Cut links belong to no region (they are outside every compacted
+        # submatrix), so this ledger is their only accounting.
         self.cut_base: dict[tuple[int, int], float] = {}
         self.cut_residual: dict[tuple[int, int], float] = {}
         self.cut_link_up: dict[tuple[int, int], bool] = {}
@@ -271,7 +444,6 @@ class RegionalControlPlane:
         ]
         self._span_active: dict[int, SpanningTicket] = {}
         self._part_of: dict[tuple[int, int], int] = {}  # (region, tid) -> rid
-
         # global rid space over both local and spanning requests
         self._rid = itertools.count()
         self._local: dict[int, tuple[int, int]] = {}  # rid -> (region, lrid)
@@ -285,6 +457,8 @@ class RegionalControlPlane:
         self.span_stats = {
             "attempts": 0, "admitted": 0, "dropped": 0,
             "displaced": 0, "no_cut": 0,
+            "multi_hop": 0,  # admitted over chains of >= 3 regions
+            "max_chain": 0,  # longest admitted region chain
         }
 
     # -- registration / submission ------------------------------------------
@@ -306,14 +480,18 @@ class RegionalControlPlane:
     def submit(self, tenant: str, df: DataflowPath, *, klass: int = 0) -> int:
         """Queue a request with its *home* (source) region; a request whose
         endpoints straddle regions queues with the home region's broker
-        side instead and is placed by 2PC at pump time.  Returns a global
-        rid valid across regions."""
+        side instead and is placed by 2PC at pump time.  ``df`` is in
+        global ids; in-region requests are compacted into the owning
+        region's local id space here, at the broker boundary.  Returns a
+        global rid valid across regions."""
         st = self.span_tenants[tenant]  # KeyError for unregistered
         rid = next(self._rid)
         ra = int(self.region_of[df.src])
         rb = int(self.region_of[df.dst])
         if ra == rb:
-            lrid = self.regions[ra].submit(tenant, df, klass=klass)
+            lrid = self.regions[ra].submit(
+                tenant, self.views[ra].compact_df(df), klass=klass
+            )
             self._local[rid] = (ra, lrid)
             self._grid_of[(ra, lrid)] = rid
         else:
@@ -350,6 +528,16 @@ class RegionalControlPlane:
             for t, dq in q.items():
                 out[t] += sum(r.creq_sum for r in dq)
         return out
+
+    def owner_region(self, ticket: Ticket) -> Optional[int]:
+        """The region whose placer holds ``ticket`` (by object identity —
+        tids are per-region counters and collide across regions).  Use it
+        to pick the right ``plane.views[r]`` for lifting an in-region
+        handle's local-id mapping/route back to global ids."""
+        for r, cp in enumerate(self.regions):
+            if cp.placer.tickets.get(ticket.tid) is ticket:
+                return r
+        return None
 
     def active_ids(self) -> list[int]:
         """Global rids of active requests across every region + spanning."""
@@ -477,7 +665,7 @@ class RegionalControlPlane:
                         ControlPlane._enqueue(q, req, front_of_class=True)
         return out
 
-    # -- two-phase commit over cut edges -------------------------------------
+    # -- region quotient graph / chain selection -----------------------------
 
     def _cut_alive(self, u: int, v: int) -> bool:
         return (
@@ -485,44 +673,131 @@ class RegionalControlPlane:
             and bool(self.node_up[u]) and bool(self.node_up[v])
         )
 
-    def _candidate_cuts(self, df: DataflowPath, ra: int, rb: int) -> list:
-        """Up to ``max_cut_attempts`` (split, cut-edge) candidates: splits
-        ordered by compute balance between the halves, cut edges by link
-        latency; gateway pinning must stay consistent with the pinned
-        endpoints, and the cut must have the bandwidth left."""
-        edges = [
-            e for e in self._cut_by_pair.get((ra, rb), ())
-            if self._cut_alive(*e)
-        ]
-        if not edges:
-            return []
-        edges.sort(key=lambda e: float(self.base.lat[e]))
-        total = float(np.sum(df.creq))
-        prefix = np.cumsum(df.creq.astype(np.float64))
-        splits = sorted(
-            range(df.p - 1),
-            key=lambda s: (abs(2.0 * float(prefix[s]) - total), s),
+    def _quotient_adjacency(self) -> dict[int, dict[int, float]]:
+        """The quotient graph of regions under the currently-alive cut
+        edges: ``adj[r1][r2]`` = min latency among alive (r1 -> r2) cuts."""
+        adj: dict[int, dict[int, float]] = {}
+        for (r1, r2), edges in self._cut_by_pair.items():
+            lats = [
+                float(self.base.lat[e]) for e in edges if self._cut_alive(*e)
+            ]
+            if lats:
+                adj.setdefault(r1, {})[r2] = min(lats)
+        return adj
+
+    def _region_chain(self, ra: int, rb: int) -> Optional[list[int]]:
+        """Fewest-hop region chain ``ra -> ... -> rb`` over the quotient
+        graph (ties by summed min cut latency, then region ids — fully
+        deterministic).  None when the quotient graph is partitioned."""
+        adj = self._quotient_adjacency()
+        best: dict[int, tuple[int, float]] = {ra: (0, 0.0)}
+        heap: list[tuple[int, float, tuple[int, ...]]] = [(0, 0.0, (ra,))]
+        while heap:
+            hops, lat, path = heapq.heappop(heap)
+            r = path[-1]
+            if r == rb:
+                return list(path)
+            if (hops, lat) > best.get(r, (hops, lat)):
+                continue  # stale heap entry
+            for nb in sorted(adj.get(r, {})):
+                if nb in path:
+                    continue
+                cand = (hops + 1, lat + adj[r][nb])
+                if nb not in best or cand < best[nb]:
+                    best[nb] = cand
+                    heapq.heappush(heap, (*cand, path + (nb,)))
+        return None
+
+    def _chain_feasible(self, df: DataflowPath, splits, gates) -> bool:
+        """Cut-bandwidth screen for one candidate.  Ghost gateway
+        endpoints (see :func:`split_dataflow_chain`) remove every
+        structural pinning constraint — whether a segment can actually
+        route from its gateway is the regional solve's decision."""
+        for s, e in zip(splits, gates):
+            if self.cut_residual[e] + _EPS < float(df.breq[s]):
+                return False
+        return True
+
+    def _candidate_chains(self, df: DataflowPath, chain: list[int]) -> list:
+        """Up to ``max_cut_attempts`` (splits, cut-edges) candidates for a
+        region chain: split combinations (non-decreasing — repeats make
+        transit regions) ordered by compute balance across the segments,
+        cut edges per hop by link latency (hop order lexicographic)."""
+        m = len(chain) - 1
+        p = df.p
+        edge_lists = []
+        for (r1, r2) in zip(chain[:-1], chain[1:]):
+            edges = [
+                e for e in self._cut_by_pair.get((r1, r2), ())
+                if self._cut_alive(*e)
+            ]
+            if not edges:
+                return []
+            edges.sort(key=lambda e: float(self.base.lat[e]))
+            edge_lists.append(edges)
+        prefix = np.concatenate([[0.0], np.cumsum(df.creq.astype(np.float64))])
+        target = float(prefix[-1]) / (m + 1)
+
+        def balance(splits):
+            bounds = (-1,) + splits + (p - 1,)
+            return sum(
+                abs(float(prefix[bounds[i + 1] + 1] - prefix[bounds[i] + 1])
+                    - target)
+                for i in range(m + 1)
+            )
+
+        # bounded search: the exact combination space C(p+m-2, m) is only
+        # enumerated while it is small; long dataflows over long chains
+        # restrict each cut's candidate positions to a window around its
+        # balanced quantile (where balance() is minimized anyway), and a
+        # hard islice cap bounds the scoring work outright.  nsmallest
+        # then keeps a pool sized so even an adversarial run of
+        # infeasible splits cannot starve the max_cut_attempts quota.
+        positions = range(p - 1)
+        if math.comb(p - 1 + m - 1, m) > 20_000:
+            target_pos = {
+                min(max(int(np.searchsorted(
+                    prefix, float(prefix[-1]) * i / (m + 1))) + d, 0), p - 2)
+                for i in range(1, m + 1)
+                for d in range(-4, 5)
+            }
+            positions = sorted(target_pos)
+        pool = max(32, 8 * self.max_cut_attempts)
+        combos = heapq.nsmallest(
+            pool,
+            itertools.islice(
+                itertools.combinations_with_replacement(positions, m),
+                50_000),
+            key=lambda s: (balance(s), s),
         )
         out = []
-        for s in splits:
-            need = float(df.breq[s])
-            for (u, v) in edges:
-                if s == 0 and u != df.src:
-                    continue  # a 1-node head segment pins src == gateway
-                if s == df.p - 2 and v != df.dst:
-                    continue  # a 1-node tail segment pins gateway == dst
-                if self.cut_residual[(u, v)] + _EPS < need:
+        for splits in combos:
+            for gates in itertools.product(*edge_lists):
+                if not self._chain_feasible(df, splits, gates):
                     continue
-                out.append((s, u, v))
+                out.append((splits, gates))
                 if len(out) >= self.max_cut_attempts:
                     return out
         return out
 
+    # -- two-phase commit over the chain -------------------------------------
+
     def _reserve_plain(self, r: int, seg: DataflowPath, tenant: str,
                        klass: int) -> Optional[Ticket]:
         """Phase-1 reserve of one segment in region ``r`` against its own
-        residual only — freely abortable, displaces nothing."""
-        return self.regions[r].placer.admit(seg, tenant=tenant, klass=klass)
+        residual only — freely abortable, displaces nothing.  The segment
+        (global gateway pins) is compacted into the region's local id
+        space here.  A failed reserve is a 2PC probe, not a service
+        rejection (the spanning outcome is accounted by the broker's
+        ledger/span_stats), so the placer's rejected counter is
+        reconciled — same convention as ``admit_preempting``'s probes."""
+        placer = self.regions[r].placer
+        t = placer.admit(
+            self.views[r].compact_df(seg), tenant=tenant, klass=klass
+        )
+        if t is None:
+            placer.stats.rejected -= 1
+        return t
 
     def _reserve_preempting(self, r: int, seg: DataflowPath, tenant: str,
                             klass: int) -> Optional[Ticket]:
@@ -538,9 +813,11 @@ class RegionalControlPlane:
         dropped)."""
         cp = self.regions[r]
         t, victims = cp.placer.admit_preempting(
-            seg, tenant=tenant, klass=klass,
+            self.views[r].compact_df(seg), tenant=tenant, klass=klass,
             max_displaced_cost=self.preempt_budget,
         )
+        if t is None:
+            cp.placer.stats.rejected -= 1  # a probe, not a rejection
         if victims:
             for part in cp.preempt_reclaim(victims):
                 self._displace_span_part(r, part)
@@ -553,83 +830,105 @@ class RegionalControlPlane:
         cp.placer.release(ticket.tid, reason=None)
         cp.placer.stats.admitted -= 1  # the reserve never really served
 
-    def _commit_spanning(self, req: Request, s: int, u: int, v: int,
-                         parts: list) -> SpanningTicket:
-        need = float(req.df.breq[s])
-        self.cut_residual[(u, v)] -= need
+    def _commit_spanning(self, req: Request, chain: list[int], splits,
+                         gates, tickets: list[Ticket]) -> SpanningTicket:
+        cut_bws = [float(req.df.breq[s]) for s in splits]
+        for e, b in zip(gates, cut_bws):
+            self.cut_residual[e] -= b
+        parts = [
+            SpanPart(chain[i], t.tid, t.df, self.views[chain[i]].version)
+            for i, t in enumerate(tickets)
+        ]
         st = SpanningTicket(
             rid=req.rid, req=req, parts=parts,
-            cut=(u, v), cut_bw=need, split=s,
+            cuts=[tuple(e) for e in gates], cut_bws=cut_bws,
+            splits=list(splits),
         )
         self._span_active[req.rid] = st
-        for (pr, tid, _seg) in parts:
-            self._part_of[(pr, tid)] = req.rid
+        for part in parts:
+            self._part_of[(part.region, part.tid)] = req.rid
+        if len(chain) >= 3:
+            self.span_stats["multi_hop"] += 1
+        self.span_stats["max_chain"] = max(
+            self.span_stats["max_chain"], len(chain))
         return st
 
-    def _try_place_spanning(self, req: Request) -> Optional[SpanningTicket]:
-        """Bounded 2PC over the cut candidates.
+    def _attempt_candidate(self, req: Request, chain: list[int], splits,
+                           gates, can_preempt: bool) -> Optional[SpanningTicket]:
+        """One bounded 2PC over every segment of one candidate.
 
-        Per candidate, reservations are plain (freely abortable) except
-        that the *last* missing one may escalate to budgeted preemption —
-        in at most ONE region per admission, and only when every sibling
-        reservation is already held, so preemption victims are displaced
-        only by an admission that commits.  A candidate that cannot
-        complete aborts every reservation it took; nothing standing is
-        ever destroyed by a failed attempt."""
+        Reservations are plain (freely abortable) in chain order; at most
+        ONE may escalate to budgeted preemption, and only as the *last*
+        reservation of the candidate while every sibling is already held —
+        so preemption victims are displaced only by an admission that
+        commits.  A candidate that cannot complete aborts every
+        reservation it took; nothing standing is ever destroyed by a
+        failed attempt.  Message cost per candidate is at most
+        ``2 * len(chain) + 2`` (prepare/commit per segment, plus the
+        nack + preemptive re-prepare of the single blocker).
+        """
+        df = req.df
+        segs = split_dataflow_chain(df, splits, gates)
+        held: dict[int, Ticket] = {}
+        failed: list[int] = []
+        for i, seg in enumerate(segs):
+            self._twopc_msgs += 1  # prepare segment i
+            t = self._reserve_plain(chain[i], seg, req.tenant, req.klass)
+            if t is None:
+                self._twopc_msgs += 1  # nack i
+                failed.append(i)
+                if not can_preempt or len(failed) > 1:
+                    break  # candidate dead: >1 blocker can't be rescued
+            else:
+                held[i] = t
+        if len(failed) == 1 and can_preempt and len(held) == len(segs) - 1:
+            i = failed[0]
+            self._twopc_msgs += 1  # prepare i, preemptive retry (last)
+            t = self._reserve_preempting(chain[i], segs[i],
+                                         req.tenant, req.klass)
+            if t is None:
+                self._twopc_msgs += 1  # nack i
+            else:
+                held[i] = t
+                failed = []
+        ok = not failed and len(held) == len(segs) and all(
+            self.cut_residual[e] + _EPS >= float(df.breq[s])
+            for s, e in zip(splits, gates)
+        )
+        if not ok:
+            for i in sorted(held):
+                self._twopc_msgs += 1  # abort i
+                self._abort_reservation(chain[i], held[i])
+            return None
+        self._twopc_msgs += len(segs)  # commit every segment
+        return self._commit_spanning(
+            req, chain, splits, gates, [held[i] for i in range(len(segs))]
+        )
+
+    def _try_place_spanning(self, req: Request) -> Optional[SpanningTicket]:
+        """Chain selection + bounded 2PC over the cut candidates.
+
+        The fewest-hop region chain is computed over the quotient graph of
+        regions, so dataflows spanning >= 3 regions — or region pairs with
+        no direct cut edge — decompose into one gateway-pinned segment per
+        region on the chain instead of retrying until dropped."""
         df = req.df
         ra = int(self.region_of[df.src])
         rb = int(self.region_of[df.dst])
-        candidates = self._candidate_cuts(df, ra, rb)
+        chain = self._region_chain(ra, rb)
+        if chain is None:
+            self.span_stats["no_cut"] += 1
+            return None
+        candidates = self._candidate_chains(df, chain)
         if not candidates:
             self.span_stats["no_cut"] += 1
             return None
         can_preempt = self.preempt and req.klass > 0
-        for (s, u, v) in candidates:
-            need = float(df.breq[s])
-            seg_a, seg_b = split_dataflow(df, s, u, v)
-            self._twopc_msgs += 1  # prepare A
-            t_a = self._reserve_plain(ra, seg_a, req.tenant, req.klass)
-            if t_a is not None:
-                if self.cut_residual[(u, v)] + _EPS < need:
-                    self._twopc_msgs += 1  # abort A
-                    self._abort_reservation(ra, t_a)
-                    continue
-                self._twopc_msgs += 1  # prepare B
-                t_b = self._reserve_plain(rb, seg_b, req.tenant, req.klass)
-                if t_b is None and can_preempt:
-                    self._twopc_msgs += 1  # prepare B, preemptive retry
-                    t_b = self._reserve_preempting(
-                        rb, seg_b, req.tenant, req.klass)
-                if t_b is None:
-                    self._twopc_msgs += 2  # nack B + abort A
-                    self._abort_reservation(ra, t_a)
-                    continue
-                self._twopc_msgs += 2  # commit A + commit B
-                return self._commit_spanning(
-                    req, s, u, v,
-                    [(ra, t_a.tid, seg_a), (rb, t_b.tid, seg_b)])
-            self._twopc_msgs += 1  # nack A
-            if not can_preempt:
-                continue
-            # A is the blocker: hold B (plain) first, then preempt into A
-            # as the final reservation of the candidate
-            if self.cut_residual[(u, v)] + _EPS < need:
-                continue
-            self._twopc_msgs += 1  # prepare B
-            t_b = self._reserve_plain(rb, seg_b, req.tenant, req.klass)
-            if t_b is None:
-                self._twopc_msgs += 1  # nack B
-                continue
-            self._twopc_msgs += 1  # prepare A, preemptive
-            t_a = self._reserve_preempting(ra, seg_a, req.tenant, req.klass)
-            if t_a is None:
-                self._twopc_msgs += 2  # nack A + abort B
-                self._abort_reservation(rb, t_b)
-                continue
-            self._twopc_msgs += 2  # commit A + commit B
-            return self._commit_spanning(
-                req, s, u, v,
-                [(ra, t_a.tid, seg_a), (rb, t_b.tid, seg_b)])
+        for (splits, gates) in candidates:
+            st = self._attempt_candidate(req, chain, splits, gates,
+                                         can_preempt)
+            if st is not None:
+                return st
         return None
 
     def _forget_local(self, r: int, lrid: int) -> None:
@@ -639,27 +938,43 @@ class RegionalControlPlane:
         if rid is not None:
             self._local.pop(rid, None)
 
-    def _displace_span_part(self, r: int, part: Ticket) -> None:
-        """A spanning segment was preempted out of region ``r``: tear down
-        the rest of its composite placement (other-region segments + the
-        cut reservation) and requeue the whole request with its home
-        region, front of its class band."""
-        rid = self._part_of.pop((r, part.tid), None)
-        if rid is None:
-            return  # not a spanning segment (placer used directly)
-        st = self._span_active.pop(rid)
-        old_parts = [part]
-        for (pr, tid, _seg) in st.parts:
-            if (pr, tid) == (r, part.tid):
+    def _teardown_span(self, st: SpanningTicket,
+                       skip: Optional[tuple[int, int]] = None) -> list[Ticket]:
+        """Release every still-live reservation of a spanning placement
+        (``skip`` names a (region, tid) already gone, e.g. the preempted
+        part) and return the cut bandwidth.  Tolerates parts whose region
+        already dropped the local ticket — the teardown must always
+        complete for *all* siblings, never leak a partial reservation."""
+        old: list[Ticket] = []
+        for part in st.parts:
+            self._part_of.pop((part.region, part.tid), None)
+            if skip is not None and (part.region, part.tid) == skip:
                 continue
-            self._part_of.pop((pr, tid), None)
-            tk = self.regions[pr].placer.tickets.get(tid)
+            tk = self.regions[part.region].placer.tickets.get(part.tid)
             if tk is not None:
-                # the displacement event was already counted once by the
-                # victim segment's preemption — siblings are bookkeeping
-                self.regions[pr].placer.release(tid, reason=None)
-                old_parts.append(tk)
-        self.cut_residual[st.cut] += st.cut_bw
+                self.regions[part.region].placer.release(part.tid, reason=None)
+                old.append(tk)
+        for e, b in zip(st.cuts, st.cut_bws):
+            self.cut_residual[e] += b
+        return old
+
+    def _displace_span_part(self, r: int, part: Ticket) -> None:
+        """A spanning segment was preempted (or churn-dropped) out of
+        region ``r``: tear down the rest of its composite placement
+        (other-region segments + the cut reservations) and requeue the
+        whole request with its home region, front of its class band.
+        Idempotent — a second displacement of an already-torn-down span
+        is a no-op."""
+        rid = self._part_of.get((r, part.tid))
+        if rid is None:
+            return  # not a spanning segment (or span already torn down)
+        st = self._span_active.pop(rid, None)
+        if st is None:
+            self._part_of.pop((r, part.tid), None)
+            return
+        # the displacement event was already counted once by the victim
+        # segment's preemption/drop — siblings are bookkeeping
+        old_parts = [part] + self._teardown_span(st, skip=(r, part.tid))
         self.span_stats["displaced"] += 1
         self.span_tenants[st.tenant].preempted += 1
         st.req.attempts = 0
@@ -673,13 +988,13 @@ class RegionalControlPlane:
     # -- release / churn ------------------------------------------------------
 
     def release(self, rid: int) -> None:
-        st = self._span_active.get(rid)
+        st = self._span_active.pop(rid, None)
         if st is not None:
-            del self._span_active[rid]
-            for (pr, tid, _seg) in st.parts:
-                self._part_of.pop((pr, tid), None)
-                self.regions[pr].placer.release(tid)
-            self.cut_residual[st.cut] += st.cut_bw
+            # guarded teardown (tolerates a sibling whose region already
+            # dropped its local ticket); the request-level release is
+            # accounted once, by the broker's ledger — segment releases
+            # are regional bookkeeping, exactly like displacement
+            self._teardown_span(st)
             self.span_tenants[st.tenant].released += 1
             return
         r, lrid = self._local[rid]
@@ -699,13 +1014,7 @@ class RegionalControlPlane:
             g for g, st in self._span_active.items() if pred(st)
         ]:
             st = self._span_active.pop(rid)
-            for (pr, tid, _seg) in st.parts:
-                self._part_of.pop((pr, tid), None)
-                tk = self.regions[pr].placer.tickets.get(tid)
-                if tk is not None:
-                    self.regions[pr].placer.release(tid, reason=None)
-                    old.append(tk)
-            self.cut_residual[st.cut] += st.cut_bw
+            old += self._teardown_span(st)
             self.span_stats["displaced"] += 1
             self.span_tenants[st.tenant].preempted += 1
             st.req.attempts = 0
@@ -720,19 +1029,30 @@ class RegionalControlPlane:
         return old
 
     def _span_uses_node(self, st: SpanningTicket, v: int) -> bool:
-        if v in st.cut:
-            return True
-        for (pr, tid, _seg) in st.parts:
-            tk = self.regions[pr].placer.tickets.get(tid)
-            if tk is not None and v in tk.mapping.route:
+        """Does the placement touch global node ``v`` — as a gateway of
+        any hop, or anywhere on a segment's (region-local) route?"""
+        for (u, w) in st.cuts:
+            if v in (u, w):
+                return True
+        for part in st.parts:
+            view = self.views[part.region]
+            if not view.contains(v):
+                continue
+            lv = view.to_local(v)
+            tk = self.regions[part.region].placer.tickets.get(part.tid)
+            if tk is not None and lv in tk.mapping.route:
                 return True
         return False
 
     def _span_uses_link(self, st: SpanningTicket, u: int, v: int) -> bool:
-        for (pr, tid, _seg) in st.parts:
-            tk = self.regions[pr].placer.tickets.get(tid)
+        for part in st.parts:
+            view = self.views[part.region]
+            if not (view.contains(u) and view.contains(v)):
+                continue
+            lu, lv = view.to_local(u), view.to_local(v)
+            tk = self.regions[part.region].placer.tickets.get(part.tid)
             if tk is not None and (
-                (u, v) in tk.edge_load or (v, u) in tk.edge_load
+                (lu, lv) in tk.edge_load or (lv, lu) in tk.edge_load
             ):
                 return True
         return False
@@ -749,28 +1069,33 @@ class RegionalControlPlane:
         return alive, requeued + hook_old
 
     def fail_node(self, v: int) -> tuple[list[Ticket], list[Ticket]]:
-        """Take node ``v`` down.  Spanning placements touching it (as a
-        gateway or anywhere on a segment route) are displaced back to
-        their broker queues first, then the owning region re-maps its
-        local tickets on the degraded subgraph.  Same ``(alive,
-        requeued)`` contract as the centralized plane; ``requeued`` also
-        covers spanning placements displaced by rescue preemptions during
-        the re-map."""
+        """Take global node ``v`` down.  Spanning placements touching it
+        (as a gateway or anywhere on a segment route) are displaced back
+        to their broker queues first, then the owning region re-maps its
+        local tickets on the degraded subgraph (in its local id space; the
+        region's view is invalidated — bijection generation bumped).  Same
+        ``(alive, requeued)`` contract as the centralized plane;
+        ``requeued`` also covers spanning placements displaced by rescue
+        preemptions during the re-map."""
         v = int(v)
         self.node_up[v] = False
         requeued_span = self._displace_spans(
             lambda st: self._span_uses_node(st, v)
         )
+        r = int(self.region_of[v])
+        self.views[r].invalidate()
+        lv = int(self.views[r].to_local(v))
         alive, requeued = self._churn_call(
-            lambda: self.regions[int(self.region_of[v])].fail_node(v)
+            lambda: self.regions[r].fail_node(lv)
         )
         return alive, requeued + requeued_span
 
     def fail_link(self, u: int, v: int) -> tuple[list[Ticket], list[Ticket]]:
         """Take a (symmetric) link down: an in-region link fails through
-        the owning region; a *cut* link partitions the region pair — every
-        spanning placement riding it is displaced and requeued (healed by
-        ``restore_link``)."""
+        the owning region (translated to its local id space); a *cut*
+        link degrades the quotient graph — every spanning placement riding
+        it is displaced and requeued, and chains re-route around it on the
+        next pump (healed by ``restore_link``)."""
         u, v = int(u), int(v)
         if self.region_of[u] == self.region_of[v]:
             # spanning segments routed over the link must leave through the
@@ -778,27 +1103,36 @@ class RegionalControlPlane:
             requeued_span = self._displace_spans(
                 lambda st: self._span_uses_link(st, u, v)
             )
+            r = int(self.region_of[u])
+            self.views[r].invalidate()
+            lu, lv = int(self.views[r].to_local(u)), int(self.views[r].to_local(v))
             alive, requeued = self._churn_call(
-                lambda: self.regions[int(self.region_of[u])].fail_link(u, v)
+                lambda: self.regions[r].fail_link(lu, lv)
             )
             return alive, requeued + requeued_span
         for e in ((u, v), (v, u)):
             if e in self.cut_link_up:
                 self.cut_link_up[e] = False
         requeued_span = self._displace_spans(
-            lambda st: st.cut in ((u, v), (v, u))
+            lambda st: any(c in ((u, v), (v, u)) for c in st.cuts)
         )
         return [], requeued_span
 
     def restore_node(self, v: int) -> None:
         v = int(v)
         self.node_up[v] = True
-        self.regions[int(self.region_of[v])].restore_node(v)
+        r = int(self.region_of[v])
+        self.views[r].invalidate()
+        self.regions[r].restore_node(int(self.views[r].to_local(v)))
 
     def restore_link(self, u: int, v: int) -> None:
         u, v = int(u), int(v)
         if self.region_of[u] == self.region_of[v]:
-            self.regions[int(self.region_of[u])].restore_link(u, v)
+            r = int(self.region_of[u])
+            self.views[r].invalidate()
+            self.regions[r].restore_link(
+                int(self.views[r].to_local(u)), int(self.views[r].to_local(v))
+            )
             return
         for e in ((u, v), (v, u)):
             if e in self.cut_link_up:
@@ -828,11 +1162,41 @@ class RegionalControlPlane:
         s.gossip_messages = self.bus.messages_sent
         s.twopc_messages = self._twopc_msgs
         s.messages_sent = s.gossip_messages + s.twopc_messages
+        solves = sum(cp.placer.stats.solves for cp in self.regions)
+        if solves:
+            s.solve_n = round(sum(
+                cp.placer.stats.solve_n_sum for cp in self.regions) / solves)
         return s
+
+    def solve_size_report(self) -> dict:
+        """The compute-locality story in numbers: the padded node
+        dimension every regional DP actually ran over, next to the global
+        ``n`` the masked (pre-compaction) plane would have paid."""
+        per = []
+        for r, cp in enumerate(self.regions):
+            st = cp.placer.stats
+            per.append({
+                "region": r,
+                "n_r": self.views[r].n_local,
+                "solves": st.solves,
+                "mean_solve_n": st.mean_solve_n,
+            })
+        solves = sum(p["solves"] for p in per)
+        nsum = sum(cp.placer.stats.solve_n_sum for cp in self.regions)
+        return {
+            "global_n": self.base.n,
+            "regions": per,
+            "solves": solves,
+            "mean_solve_n": (nsum / solves) if solves else 0.0,
+            "max_solve_n": max(
+                (p["n_r"] for p in per if p["solves"]), default=0),
+            "balanced_n_r": math.ceil(self.base.n / max(self.R, 1)),
+        }
 
     def coordination_report(self) -> dict:
         """The decentralization story in numbers: gossip volume/staleness
-        and 2PC traffic next to the spanning admission outcomes."""
+        and 2PC traffic next to the spanning admission outcomes and the
+        compacted solve sizes."""
         return {
             "regions": self.R,
             "fanout": self.bus.fanout,
@@ -846,42 +1210,33 @@ class RegionalControlPlane:
             "twopc_messages": self._twopc_msgs,
             "spanning": dict(self.span_stats),
             "cut_edges": len(self.cut_base),
+            "solve_size": self.solve_size_report(),
         }
 
     def fairness_report(self) -> dict:
-        held = self.committed_capacity()
-        queued = self.queued_demand()
-        total = sum(held.values())
-        demands = {t: held[t] + queued[t] for t in self.span_tenants}
-        weights = {
-            t: st.cfg.weight for t, st in self.span_tenants.items()
-        }
-        target = maxmin_shares(demands, weights, total)
-        deviation = {
-            t: abs(held[t] - target[t]) / target[t]
-            for t in self.span_tenants
-            if target[t] > _EPS
-        }
-        return {
-            "committed": held,
-            "queued_demand": queued,
-            "total_committed": total,
-            "target_shares": target,
-            "deviation": deviation,
-            "max_deviation": max(deviation.values(), default=0.0),
-            "coordination": self.coordination_report(),
-        }
+        rep = fairness_summary(
+            self.committed_capacity(),
+            self.queued_demand(),
+            {t: st.cfg.weight for t, st in self.span_tenants.items()},
+        )
+        rep["coordination"] = self.coordination_report()
+        return rep
 
     def check_invariants(self) -> None:
         """Every region's placer + ledger invariants, the global ledger,
-        cut-bandwidth conservation, and spanning-handle integrity."""
+        cut-bandwidth conservation, spanning-handle integrity (liveness,
+        chain well-formedness, bijection versions), and the write-through
+        global conservation of the compacted substrate: the per-region
+        local residuals + local ticket loads, lifted through the views,
+        must re-assemble the base network exactly."""
         for cp in self.regions:
             cp.check_invariants()
         led = self.conservation()
         assert led["ok"], f"global ticket conservation violated: {led}"
         reserved = {e: 0.0 for e in self.cut_base}
         for st in self._span_active.values():
-            reserved[st.cut] += st.cut_bw
+            for e, b in zip(st.cuts, st.cut_bws):
+                reserved[e] += b
         for e, base_bw in self.cut_base.items():
             assert abs(self.cut_residual[e] + reserved[e] - base_bw) < 1e-6, (
                 f"cut bandwidth conservation violated on {e}"
@@ -890,11 +1245,50 @@ class RegionalControlPlane:
                 f"negative cut residual on {e}"
             )
         for rid, st in self._span_active.items():
-            u, v = st.cut
-            assert self.region_of[u] != self.region_of[v]
-            for (pr, tid, seg) in st.parts:
-                tk = self.regions[pr].placer.tickets.get(tid)
-                assert tk is not None and tk.df is seg, (
-                    f"spanning rid {rid} holds a stale segment in region {pr}"
+            assert len(st.parts) == len(st.cuts) + 1, (
+                f"spanning rid {rid}: chain/cut arity mismatch"
+            )
+            assert list(st.splits) == sorted(st.splits), (
+                f"spanning rid {rid}: splits not non-decreasing"
+            )
+            for i, (u, v) in enumerate(st.cuts):
+                assert int(self.region_of[u]) == st.parts[i].region
+                assert int(self.region_of[v]) == st.parts[i + 1].region
+            for part in st.parts:
+                tk = self.regions[part.region].placer.tickets.get(part.tid)
+                assert tk is not None and tk.df is part.seg, (
+                    f"spanning rid {rid} holds a stale segment in region "
+                    f"{part.region}"
                 )
-                assert self._part_of.get((pr, tid)) == rid
+                assert self._part_of.get((part.region, part.tid)) == rid
+                assert part.version <= self.views[part.region].version, (
+                    f"spanning rid {rid}: part minted under a future "
+                    "bijection version"
+                )
+        # write-through conservation: re-assemble the global network from
+        # the compacted regional state.  Node capacity must reconstruct
+        # exactly; in-region bandwidth likewise; cut bandwidth is checked
+        # above (it belongs to the broker, not to any region).
+        cap_res = np.zeros(self.base.n)
+        cap_load = np.zeros(self.base.n)
+        bw_res = np.zeros((self.base.n, self.base.n))
+        bw_load = np.zeros((self.base.n, self.base.n))
+        in_region = np.zeros((self.base.n, self.base.n), bool)
+        for r, cp in enumerate(self.regions):
+            view = self.views[r]
+            cap_res += view.uncompact_node_vec(cp.placer.cap)
+            bw_res += view.uncompact_link_mat(cp.placer.bw)
+            in_region |= view.uncompact_link_mat(
+                np.ones((view.n_local, view.n_local), bool))
+            for tk in cp.placer.tickets.values():
+                for gv, c in view.uncompact_node_load(tk.node_load).items():
+                    cap_load[gv] += c
+                for (gu, gv), b in view.uncompact_edge_load(
+                        tk.edge_load).items():
+                    bw_load[gu, gv] += b
+        assert np.allclose(cap_res + cap_load, self.base.cap, atol=1e-4), (
+            "compacted-view write-through broke node-capacity conservation"
+        )
+        assert np.allclose(
+            (bw_res + bw_load)[in_region], self.base.bw[in_region], atol=1e-4
+        ), "compacted-view write-through broke link-bandwidth conservation"

@@ -119,13 +119,15 @@ def test_gossip_budget_scales_linearly_in_R_and_fanout():
 
 
 def test_twopc_traffic_bounded_per_spanning_attempt():
-    """Each spanning attempt tries at most max_cut_attempts candidates and
-    each candidate costs a bounded constant of prepare/ack/commit messages
-    (<= 8, incl. the budgeted preemptive-retry orientation): broker
-    coordination is O(attempts), never a network flood."""
+    """Each spanning attempt tries at most max_cut_attempts candidates
+    and each candidate costs at most ``2 * len(chain) + 2`` messages
+    (prepare/commit per segment plus the single blocker's nack +
+    preemptive re-prepare); chains never exceed R regions: broker
+    coordination is O(attempts * R), never a network flood."""
     cp = _pump_regional(24, 4, 2, 6, requests=24)
     s = cp.engine_stats()
     attempts = cp.span_stats["attempts"]
     assert attempts > 0  # the workload did span regions
-    assert s.twopc_messages <= attempts * (8 * cp.max_cut_attempts)
+    per_candidate = 2 * cp.R + 2
+    assert s.twopc_messages <= attempts * (per_candidate * cp.max_cut_attempts)
     assert s.messages_sent == s.gossip_messages + s.twopc_messages
