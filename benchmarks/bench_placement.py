@@ -9,7 +9,9 @@
 3. Streaming admission under a Poisson arrival/departure process with
    periodic node churn (the paper's dynamic scenario, quantified):
    steady-state admission rate and re-map latency, plus an offered-load
-   sweep (rate x hold) past the knee of the admission-rate curve.
+   sweep (rate x hold) past the knee of the admission-rate curve, and a
+   pipeline-depth column at the knee (async pipelined admission: device
+   solves overlapped with host commits; gated in ``criterion``).
 4. Multi-tenant fairness at the knee (``repro.service.ControlPlane``):
    two tenants, weights 3:1, identical offered overload — weighted
    max-min standing shares vs the FCFS baseline — ending with the
@@ -34,7 +36,14 @@ import time
 
 import numpy as np
 
-from repro.core import OnlinePlacer, random_dataflow, solve, solve_batch, waxman
+from repro.core import (
+    AdmissionPipeline,
+    OnlinePlacer,
+    random_dataflow,
+    solve,
+    solve_batch,
+    waxman,
+)
 
 
 def run_archs():
@@ -230,25 +239,10 @@ def _poisson_times(rng, rate: float, horizon: float) -> list[float]:
     return ts
 
 
-def _warm_jit(rg, p: int, max_batch: float, use_kernel: bool) -> int:
-    """Warm the jit specializations an event loop will hit (power-of-two DP
-    buckets + the single-request re-solve shape), so admit/remap latencies
-    measure steady-state solves, not first-call compiles."""
-    warm_df = _request_stream(rg, 1, p, seed0=1)[0]
-    solve(rg, warm_df, method="leastcost_jax", use_kernel=use_kernel)
-    warm_max = 1 << max(1, int(np.ceil(np.log2(max(max_batch, 2)))))
-    b = 1
-    while b <= warm_max:
-        solve_batch(rg, [warm_df] * b, method="leastcost_jax",
-                    use_kernel=use_kernel, bucket_batch=True)
-        b *= 2
-    return warm_max
-
-
 def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
                   hold: float = 2.0, horizon: float = 10.0, tick: float = 0.25,
                   fail_every: float = 2.5, warmup: float = 2.0, seed: int = 11,
-                  use_kernel: bool = True,
+                  use_kernel: bool = True, pipeline_depth: int = 1,
                   out_path: str | None = "BENCH_streaming.json"):
     """Poisson arrival/departure process against one shared network.
 
@@ -259,6 +253,16 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
     micro-batched admissions and the churn re-maps.  ``out_path=None`` skips
     the JSON write (used by the overload sweep).
 
+    ``pipeline_depth`` routes the tick batches through an
+    :class:`~repro.core.AdmissionPipeline`: at depth d, a tick's solve is
+    dispatched immediately but commits only when the window forces it out
+    (or at the end-of-horizon flush), so device DPs overlap the host-side
+    validate/commit of earlier batches.  ``depth=1`` commits every push
+    in-line and is bit-identical to the synchronous ``admit_many`` path.
+    Admissions are attributed to the *dispatch* tick for rate accounting
+    (offered vs admitted must pair up) and to the *commit* tick for the
+    departure clock (capacity is only held once committed).
+
     ``steady_admission_rate`` counts only arrivals after ``warmup``: the
     ramp-up (an empty network admits everything) otherwise masks the
     saturation knee the overload sweep is looking for.
@@ -266,7 +270,8 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
     rng = np.random.default_rng(seed)
     rg = waxman(n, seed=seed)
     placer = OnlinePlacer(rg, use_kernel=use_kernel)
-    warm_max = _warm_jit(rg, p, 4 * rate * tick, use_kernel)
+    warm_max = placer.warmup(max_batch=int(max(4 * rate * tick, 2)), p=p)
+    pipe = AdmissionPipeline(placer, depth=pipeline_depth)
 
     # Poisson arrivals over the horizon
     arrivals = _poisson_times(rng, rate, horizon)
@@ -320,22 +325,38 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
             if now >= warmup:
                 offered_steady += len(batch)
             t0 = time.perf_counter()
-            tickets = placer.admit_many(batch)
+            committed = pipe.push(batch, tag=(now >= warmup))
             admit_ms.append(1e3 * (time.perf_counter() - t0))
+            for pending, tickets in committed:
+                for tk in tickets:
+                    if tk is not None:
+                        admitted_arrivals += 1
+                        if pending.tag:  # steady flag from dispatch time
+                            admitted_steady += 1
+                        heapq.heappush(
+                            departures, (now + rng.exponential(hold), tk.tid))
+        occupancy.append(len(placer.tickets))
+    # end-of-stream barrier: commit whatever the window still holds.  Timed
+    # separately — one flush drains up to depth-1 batches, which is a
+    # shutdown cost, not a per-admission latency sample.
+    flush_ms = 0.0
+    if pipe.in_flight:
+        t0 = time.perf_counter()
+        tail = pipe.flush()
+        flush_ms = 1e3 * (time.perf_counter() - t0)
+        for pending, tickets in tail:
             for tk in tickets:
                 if tk is not None:
                     admitted_arrivals += 1
-                    if now >= warmup:
+                    if pending.tag:
                         admitted_steady += 1
-                    heapq.heappush(
-                        departures, (now + rng.exponential(hold), tk.tid))
-        occupancy.append(len(placer.tickets))
     placer.check_invariants()
 
     st = placer.stats
     record = {
         "n": n, "p": p, "rate": rate, "hold": hold, "horizon": horizon,
         "tick": tick, "fail_every": fail_every, "use_kernel": use_kernel,
+        "pipeline_depth": pipeline_depth,
         "warmed_buckets_to": warm_max,  # larger churn batches may compile
         "offered": offered,
         "admitted": admitted_arrivals,  # arrival stream only
@@ -356,6 +377,10 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
         "remap_ms_mean": float(np.mean(remap_ms)) if remap_ms else 0.0,
         "remap_ms_p95": float(np.percentile(remap_ms, 95)) if remap_ms else 0.0,
         "solve_ms_total": st.solve_ms,
+        "overhead_ms_total": st.overhead_ms,
+        "conflict_resolve_ms": st.conflict_resolve_ms,
+        "stale_batches": st.stale_batches,
+        "flush_ms": flush_ms,
         "invariants_ok": True,
     }
     if out_path is not None:
@@ -368,6 +393,8 @@ def run_overload_sweep(*, rates=(12.0, 24.0, 48.0, 96.0, 192.0),
                        n: int = 24, p: int = 5, hold: float = 4.0,
                        horizon: float = 6.0, warmup: float = 2.0,
                        knee_threshold: float = 0.9,
+                       pipeline_depths=(1, 2, 4),
+                       pipeline_reps: int = 2,
                        seed: int = 11, use_kernel: bool = True,
                        baseline_rate: float = 24.0,
                        baseline_hold: float = 2.0,
@@ -382,6 +409,14 @@ def run_overload_sweep(*, rates=(12.0, 24.0, 48.0, 96.0, 192.0),
     ``run_streaming(warmup=...)``) falls below ``knee_threshold``.  That
     first saturated point is recorded as the knee; the fairness benchmark
     (``run_fairness``) runs past it on the same network.
+
+    The knee point is then re-run at each ``pipeline_depths`` entry — the
+    regime where batches are large and the network is contended, i.e. where
+    pipelining has both the most to gain (device DP overlapped with host
+    commit) and the most to lose (stale optimistic solves re-solved one by
+    one).  ``record["criterion"]`` gates the trade: the deepest pipeline's
+    admit p95 must stay within 1.1x of the synchronous knee value, and its
+    steady-state admission rate within 2 points of the synchronous path.
     """
     base = run_streaming(n=n, p=p, rate=baseline_rate, hold=baseline_hold,
                          horizon=horizon, warmup=warmup, seed=seed,
@@ -406,6 +441,48 @@ def run_overload_sweep(*, rates=(12.0, 24.0, 48.0, 96.0, 192.0),
         None,
     )
     knee = found if found is not None else sweep[-1]
+
+    # ---- pipeline-depth column at the knee ------------------------------
+    # Virtual time makes admission outcomes deterministic per (depth, seed);
+    # only the wall-clock columns vary between reps.  min-of-reps on the
+    # p95 is the same robust-floor statistic ``_best_time`` uses: the true
+    # admission cost is the floor, everything above it is runner
+    # interference.  A longer horizon gives the percentile enough samples
+    # (~64 pushes at 16s vs ~20 at the smoke horizon) that the p95 is a
+    # deep quantile instead of the 2nd-worst sample: both depths' tails
+    # are churn-push costs of ~equal magnitude, so with enough samples the
+    # ratio concentrates near 1 and the 1.1x gate has real margin.
+    pipeline = []
+    for d in sorted({max(1, int(d)) for d in pipeline_depths}):
+        best = None
+        for _ in range(pipeline_reps):
+            rec = run_streaming(n=n, p=p, rate=knee["rate"],
+                                hold=knee["hold"],
+                                horizon=max(horizon, 16.0), warmup=warmup,
+                                seed=seed, use_kernel=use_kernel,
+                                pipeline_depth=d, out_path=None)
+            if best is None or rec["admit_ms_p95"] < best["admit_ms_p95"]:
+                best = rec
+        pipeline.append({
+            "pipeline_depth": d,
+            "admit_ms_mean": best["admit_ms_mean"],
+            "admit_ms_p95": best["admit_ms_p95"],
+            "steady_admission_rate": best["steady_admission_rate"],
+            "batch_conflicts": best["batch_conflicts"],
+            "stale_batches": best["stale_batches"],
+            "conflict_resolve_ms": best["conflict_resolve_ms"],
+            "overhead_ms_total": best["overhead_ms_total"],
+        })
+    d_sync, d_deep = pipeline[0], pipeline[-1]
+    criterion = {
+        # deeper windows mean staler optimistic solves; the gates assert
+        # the overlap never costs tail latency or admitted work
+        "pipeline_p95_depth4_le_1p1x_depth1":
+            d_deep["admit_ms_p95"] <= 1.1 * d_sync["admit_ms_p95"],
+        "pipeline_admission_within_2pts":
+            abs(d_deep["steady_admission_rate"]
+                - d_sync["steady_admission_rate"]) <= 0.02,
+    }
     record = {
         "baseline": base,
         "sweep": sweep,
@@ -419,6 +496,8 @@ def run_overload_sweep(*, rates=(12.0, 24.0, 48.0, 96.0, 192.0),
             # their CI gates) are then meaningless — widen the sweep.
             "saturated": found is not None,
         },
+        "pipeline": pipeline,
+        "criterion": criterion,
     }
     if out_path is not None:
         with open(out_path, "w") as f:
@@ -469,7 +548,6 @@ def run_fairness(*, knee_rate: float, n: int = 24, p: int = 5,
         t = names[k % 2]
         arrivals[t].append(at)
         reqs[t].append(df)
-    _warm_jit(rg, p, max(micro_batch, 4 * rate_total * tick), use_kernel)
 
     def _churn_tick(placer, now, state):
         """Shared fail/restore cycle: restore the previous casualty and pick
@@ -495,6 +573,9 @@ def run_fairness(*, knee_rate: float, n: int = 24, p: int = 5,
     cp = ControlPlane(rg, policy=FairSharePolicy(slack=0.4),
                       micro_batch=micro_batch, max_attempts=10,
                       use_kernel=use_kernel)
+    # one warmup covers both runs: the FCFS placer below hits the same
+    # process-wide jit cache entries
+    cp.warmup(max_batch=int(max(micro_batch, 4 * rate_total * tick)), p=p)
     for t in names:
         cp.register_tenant(t, weight=w[t])
     # departure entries carry (rid, tid): a request displaced to the queue

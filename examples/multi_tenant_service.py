@@ -21,6 +21,7 @@ from repro.service import (
 def main():
     rg = waxman(20, seed=11)
     cp = ControlPlane(rg, policy=FairSharePolicy(slack=0.4), micro_batch=16)
+    cp.warmup(p=5)  # pre-compile the jit buckets before the first pump
     cp.register_tenant("gold", weight=3.0)
     cp.register_tenant("bronze", weight=1.0)
 

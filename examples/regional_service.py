@@ -36,6 +36,7 @@ def main():
 
     cp.register_tenant("gold", weight=3.0)
     cp.register_tenant("bronze", weight=1.0)
+    cp.warmup(p=4)  # pre-compile every region's jit buckets before pumping
 
     # Overload both tenants with mixed-span work: in-region requests and
     # requests straddling 2..4 regions along the line.

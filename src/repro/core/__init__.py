@@ -6,7 +6,10 @@ Public API:
                compacted solves (n_r-sized tensors, read/write-through)
   graph:       ResourceGraph, DataflowPath, Mapping, validate_mapping
   engine:      solve / solve_batch — ONE entry point over every backend
-  online:      OnlinePlacer — residual-capacity multi-request service
+  online:      OnlinePlacer + AdmissionPipeline — residual-capacity
+               multi-request service with cross-batch solve/commit overlap
+  residual:    ResidualState — device-resident residual tensors, versioned
+               host mirror, staleness epochs for in-flight solves
   exact:       pathmap_exact (paper Alg. 1-3), brute_force oracle
   leastcost:   leastcost_python (faithful §3.4.1), leastcost_jax (tensorized)
   simulator:   simulate (paper Alg. 4, async message passing, all §3.4 policies)
@@ -35,8 +38,22 @@ from .leastcost import (  # noqa: F401
 from .simulator import SimConfig, SimStats, simulate  # noqa: F401
 from .heuristics import anneal_python, random_k_python  # noqa: F401
 from .dag import DataflowTree, TreeMapping, treemap_leastcost  # noqa: F401
-from .engine import Stats, backends, register, solve, solve_batch  # noqa: F401
-from .online import OnlinePlacer, OnlineStats, Ticket  # noqa: F401
+from .engine import (  # noqa: F401
+    Stats,
+    backends,
+    register,
+    solve,
+    solve_batch,
+    solve_batch_dispatch,
+)
+from .online import (  # noqa: F401
+    AdmissionPipeline,
+    OnlinePlacer,
+    OnlineStats,
+    PendingAdmission,
+    Ticket,
+)
+from .residual import ResidualState  # noqa: F401
 from .topology import (  # noqa: F401
     barabasi_albert,
     paper_example,

@@ -56,7 +56,18 @@ class Stats:
     validated: bool = True
     kernel_impl: str = ""  # use_kernel paths: "pallas" | "interpret" | "ref"
     virtual_time: float = 0.0  # simulator virtual completion time
-    solve_ms: float = 0.0  # wall clock inside the backend
+    solve_ms: float = 0.0  # wall clock inside the backend (device + reconstruct)
+    # host-side admission overhead: validation / reserve / commit loops
+    # around the solves — the half of admit latency the pipelined path
+    # overlaps with the next batch's device work (service-layer counter,
+    # filled by OnlinePlacer via engine_stats; zero for bare solves).
+    overhead_ms: float = 0.0
+    # wall clock spent re-solving optimistic-concurrency conflicts
+    # individually after a stale batch solve (service-layer counter).
+    conflict_resolve_ms: float = 0.0
+    # batches whose in-flight solve was invalidated wholesale by a
+    # churn/restore epoch bump and re-solved fresh (service-layer counter).
+    stale_batches: int = 0
     batch_size: int = 1
     # node dimension the solve actually ran over — the padded DP/kernel
     # size.  Equals rg.n, or the region-local n_r when a CompactedView was
@@ -183,6 +194,11 @@ def solve_batch(
     ``view`` compacts the whole batch into the view's local id space
     before solving (every request's endpoints must live in the view):
     tiles pad to the region-local ``n_r``, mappings come back global.
+
+    ``graph_tensors`` (in ``cfg``, batched methods only) injects
+    device-resident ``{cap, bw, lat}`` so the solve skips the per-batch
+    host upload of the network — see :func:`solve_batch_dispatch` for the
+    fully asynchronous variant.
     """
     if not dfs:
         return [], Stats(method=method, batch_size=0)
@@ -196,6 +212,7 @@ def solve_batch(
         stats = Stats(method=method)
         mappings = leastcost_jax_batched(rg, list(dfs), stats=stats, **cfg)
     else:
+        cfg.pop("graph_tensors", None)  # host-loop backends have no device path
         mappings = []
         stats = Stats(method=method)
         for df in dfs:
@@ -217,6 +234,93 @@ def solve_batch(
     stats.batch_size = len(dfs)
     stats.solve_ms = 1e3 * (time.perf_counter() - t0)
     return mappings, stats
+
+
+class PendingBatchSolve:
+    """Handle for an asynchronously dispatched :func:`solve_batch`.
+
+    Batched backends dispatch the device DP and return immediately; the
+    host blocks only inside :meth:`finalize` (the commit point).  Backends
+    without native batching solve synchronously at dispatch time and
+    finalize just hands the stored result back — callers get one uniform
+    dispatch/finalize API whatever the backend (the fuzz suites drive the
+    pipeline through ``leastcost_python`` this way).
+    """
+
+    def __init__(self, method: str, view, dfs, *, pending=None, ready=None,
+                 dispatch_ms: float = 0.0):
+        self.method = method
+        self.view = view
+        self.dfs = dfs
+        self._pending = pending  # leastcost.PendingDP (batched backends)
+        self._ready = ready  # (mappings, Stats) (sync backends)
+        self._dispatch_ms = dispatch_ms
+        self._solve_n = pending.rg.n if pending is not None else None
+
+    def finalize(self) -> tuple[list[Optional[Mapping]], Stats]:
+        """Block until the solve completes; return ``(mappings, stats)``.
+
+        ``stats.solve_ms`` covers dispatch plus the blocking wait and
+        reconstruction — the same wall clock :func:`solve_batch` reports,
+        minus whatever the caller overlapped between the two halves."""
+        if self._ready is not None:
+            return self._ready
+        from .leastcost import leastcost_jax_batched_finalize
+
+        t0 = time.perf_counter()
+        stats = Stats(method=self.method)
+        mappings = leastcost_jax_batched_finalize(self._pending, stats=stats)
+        if self.view is not None and not self.view.is_identity:
+            mappings = [
+                self.view.uncompact_mapping(m) if m is not None else None
+                for m in mappings
+            ]
+        stats.solve_n = self._solve_n
+        stats.batch_size = len(self.dfs)
+        stats.solve_ms = self._dispatch_ms + 1e3 * (time.perf_counter() - t0)
+        self._ready = (mappings, stats)
+        self._pending = None
+        return self._ready
+
+
+def solve_batch_dispatch(
+    rg: ResourceGraph,
+    dfs: list[DataflowPath],
+    method: str = "leastcost_jax",
+    view=None,
+    graph_tensors=None,
+    **cfg,
+) -> PendingBatchSolve:
+    """Asynchronous :func:`solve_batch`: dispatch now, block at
+    :meth:`PendingBatchSolve.finalize`.
+
+    On batched backends the device computation starts immediately (JAX
+    async dispatch) while the caller keeps the host busy — the online
+    placer overlaps batch k+1's solve with batch k's validation/commit.
+    ``graph_tensors`` injects device-resident network tensors (see
+    ``core.residual.ResidualState``) so the dispatch ships only the O(p)
+    request tensors.  Non-batching backends run synchronously here.
+    """
+    if not dfs:
+        return PendingBatchSolve(method, view, [],
+                                 ready=([], Stats(method=method, batch_size=0)))
+    if method in BATCHED_METHODS:
+        from .leastcost import leastcost_jax_batched_dispatch
+
+        t0 = time.perf_counter()
+        if view is not None and not view.is_identity:
+            assert graph_tensors is None, "view compaction vs device tensors"
+            rg = view.compact_graph(rg)
+            dfs = [view.compact_df(d) for d in dfs]
+        pending = leastcost_jax_batched_dispatch(
+            rg, list(dfs), graph_tensors=graph_tensors, **cfg
+        )
+        return PendingBatchSolve(
+            method, view, list(dfs), pending=pending,
+            dispatch_ms=1e3 * (time.perf_counter() - t0),
+        )
+    ready = solve_batch(rg, list(dfs), method=method, view=view, **cfg)
+    return PendingBatchSolve(method, view, list(dfs), ready=ready)
 
 
 # ---------------------------------------------------------------------------

@@ -355,6 +355,103 @@ def _leastcost_dp_batched(tensors, B: int, n: int, p: int, max_rounds: int,
     return C, par_v, par_j, best_cost, best_j, t
 
 
+@dataclasses.dataclass(eq=False)
+class PendingDP:
+    """An in-flight batched DP: device arrays dispatched, not yet synced.
+
+    Produced by :func:`leastcost_jax_batched_dispatch`; holds everything
+    :func:`leastcost_jax_batched_finalize` needs to block, pull parent
+    pointers to host, and reconstruct mappings.  The jnp fields are
+    immutable device arrays over the tensors captured at dispatch time, so
+    later residual mutations cannot corrupt an in-flight solve — the basis
+    of the online placer's cross-batch optimistic pipeline.
+    """
+
+    rg: ResourceGraph  # host residual snapshot (reconstruction/validation)
+    dfs: list
+    par_v: object  # (B, n, K) device array
+    par_j: object
+    best_cost: object  # (B,) device array
+    best_j: object
+    rounds: object  # device scalar (kernel path) | None
+    kernel_impl: str = ""
+    validate: bool = True
+
+
+def leastcost_jax_batched_dispatch(
+    rg: ResourceGraph,
+    dfs: list,
+    *,
+    validate: bool = True,
+    max_rounds: Optional[int] = None,
+    use_kernel: bool = False,
+    kernel_impl: Optional[str] = None,
+    tiles=None,
+    bucket_batch: bool = False,
+    graph_tensors=None,
+) -> PendingDP:
+    """Dispatch the batched DP without waiting for the result.
+
+    JAX dispatch is asynchronous: the returned :class:`PendingDP` holds
+    unblocked device arrays, so the caller can overlap host-side work
+    (validating/committing a previous batch) with the device computation
+    and only synchronize in :func:`leastcost_jax_batched_finalize`.
+
+    ``graph_tensors`` injects device-resident ``{cap, bw, lat}`` (see
+    ``core.residual.ResidualState.device_tensors``) so the dispatch ships
+    only the O(p) per-request tensors; ``rg`` is still required as the host
+    graph the reconstruction loop walks.
+    """
+    assert dfs
+    n = rg.n
+    B = len(dfs)
+    if bucket_batch:
+        B = 1 << (B - 1).bit_length()  # next power of two
+    tensors, p_max = stack_requests(rg, dfs, pad_to=B,
+                                    graph_tensors=graph_tensors)
+    max_rounds = max_rounds or (n - 1 if n > 1 else 1)
+    impl = ""
+    if use_kernel:
+        impl = kernel_impl or ("pallas" if _on_tpu() else "ref")
+        C, par_v, par_j, best_cost, best_j, rounds = _leastcost_dp_batched(
+            tensors, B=B, n=n, p=p_max, max_rounds=max_rounds,
+            impl=impl, tiles=tiles,
+        )
+    else:
+        fn = _vmapped_dp(n, p_max, max_rounds)
+        C, par_v, par_j, best_cost, best_j, rounds = fn(tensors)
+    return PendingDP(rg, list(dfs), par_v, par_j, best_cost, best_j,
+                     rounds if use_kernel else None,
+                     kernel_impl=impl, validate=validate)
+
+
+def leastcost_jax_batched_finalize(pending: PendingDP, stats=None) -> list:
+    """Block on an in-flight batched DP and reconstruct its mappings.
+
+    This is the only host synchronization point of the batched path: the
+    ``np.asarray`` pulls force completion of the dispatched computation
+    (the pipelined placer's commit-time ``block_until_ready``)."""
+    par_v, par_j = np.asarray(pending.par_v), np.asarray(pending.par_j)
+    best_cost, best_j = np.asarray(pending.best_cost), np.asarray(pending.best_j)
+    if stats is not None and pending.rounds is not None:
+        stats.kernel_impl = pending.kernel_impl
+        stats.rounds = int(pending.rounds)
+    out = []
+    for i, df in enumerate(pending.dfs):
+        per = HeuristicStats()
+        out.append(
+            reconstruct_mapping(
+                pending.rg, df, par_v[i], par_j[i],
+                float(best_cost[i]), int(best_j[i]),
+                validate=pending.validate, stats=per,
+            )
+        )
+        if stats is not None:
+            stats.fallback_used |= per.fallback_used
+            stats.validated &= per.validated
+    return out
+
+
 def leastcost_jax_batched(
     rg: ResourceGraph,
     dfs: list,
@@ -366,12 +463,17 @@ def leastcost_jax_batched(
     tiles=None,
     bucket_batch: bool = False,
     stats=None,
+    graph_tensors=None,
 ) -> list:
     """Solve many mapping requests on ONE shared resource network in a
     single vmapped DP (§Perf C6): the realistic continuous-arrival case —
     link matrices are shared across the batch, so the per-request marginal
     cost is one (n, p_max) state tensor.  Requests of mixed ``p`` are padded
     (``core.problem.pad_request``).  Returns a list of (Mapping | None).
+
+    Implemented as dispatch + finalize (see
+    :func:`leastcost_jax_batched_dispatch`): callers that want to overlap
+    the device solve with host work use the two halves directly.
 
     ``use_kernel=True`` selects the fused batched superstep path
     (``repro.kernels.minplus.batched``) instead of vmapping the per-request
@@ -388,39 +490,12 @@ def leastcost_jax_batched(
     anomaly signals across the batch: ``fallback_used`` is set if ANY
     request needed the path-carrying rescue, ``validated`` cleared if ANY
     reconstruction failed validation."""
-    assert dfs
-    n = rg.n
-    B = len(dfs)
-    if bucket_batch:
-        B = 1 << (B - 1).bit_length()  # next power of two
-    tensors, p_max = stack_requests(rg, dfs, pad_to=B)
-    max_rounds = max_rounds or (n - 1 if n > 1 else 1)
-    if use_kernel:
-        impl = kernel_impl or ("pallas" if _on_tpu() else "ref")
-        C, par_v, par_j, best_cost, best_j, rounds = _leastcost_dp_batched(
-            tensors, B=B, n=n, p=p_max, max_rounds=max_rounds,
-            impl=impl, tiles=tiles,
-        )
-        if stats is not None:
-            stats.kernel_impl = impl
-            stats.rounds = int(rounds)
-    else:
-        fn = _vmapped_dp(n, p_max, max_rounds)
-        C, par_v, par_j, best_cost, best_j, _ = fn(tensors)
-    par_v, par_j = np.asarray(par_v), np.asarray(par_j)
-    out = []
-    for i, df in enumerate(dfs):
-        per = HeuristicStats()
-        out.append(
-            reconstruct_mapping(
-                rg, df, par_v[i], par_j[i], float(best_cost[i]), int(best_j[i]),
-                validate=validate, stats=per,
-            )
-        )
-        if stats is not None:
-            stats.fallback_used |= per.fallback_used
-            stats.validated &= per.validated
-    return out
+    pending = leastcost_jax_batched_dispatch(
+        rg, dfs, validate=validate, max_rounds=max_rounds,
+        use_kernel=use_kernel, kernel_impl=kernel_impl, tiles=tiles,
+        bucket_batch=bucket_batch, graph_tensors=graph_tensors,
+    )
+    return leastcost_jax_batched_finalize(pending, stats=stats)
 
 
 def leastcost_jax(

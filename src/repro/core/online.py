@@ -34,15 +34,18 @@ Invariant (checked by ``check_invariants``): for every node and link,
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
+import time
 from types import MappingProxyType
 from typing import Mapping as MappingT, Optional, Sequence
 
 import numpy as np
 
 from . import engine
-from .graph import INF, DataflowPath, Mapping, ResourceGraph, validate_mapping
+from .graph import DataflowPath, Mapping, ResourceGraph, validate_mapping
+from .residual import ResidualState
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -83,9 +86,12 @@ class OnlineStats:
     preempted: int = 0  # released to make room for a higher-class admission
     batches: int = 0
     batch_conflicts: int = 0  # re-solved individually after a stale batch solve
+    stale_batches: int = 0  # in-flight batches invalidated by churn/restore
     defrag_rounds: int = 0  # global re-optimization passes attempted
     defrag_commits: int = 0  # ... that improved the objective and committed
-    solve_ms: float = 0.0
+    solve_ms: float = 0.0  # device solve + reconstruction wall clock
+    overhead_ms: float = 0.0  # host validation/commit loops around the solves
+    conflict_resolve_ms: float = 0.0  # individual conflict re-solves, end to end
     solves: int = 0  # DP solves issued (a micro-batch counts once)
     solve_n_sum: int = 0  # summed padded node dimension of those solves
 
@@ -116,6 +122,32 @@ def _node_loads(df: DataflowPath, mapping: Mapping) -> dict:
     for i, v in enumerate(mapping.assign):
         loads[v] = loads.get(v, 0.0) + float(df.creq[i])
     return loads
+
+
+@dataclasses.dataclass(eq=False)
+class PendingAdmission:
+    """An in-flight micro-batch: solve dispatched, commit deferred.
+
+    Produced by :meth:`OnlinePlacer.dispatch_admit`, consumed exactly once
+    by :meth:`OnlinePlacer.commit_admit`.  ``epoch`` is the placer's fence
+    value at dispatch: if it moved by commit time (churn, restore, regional
+    view invalidation) the dispatched results are discarded and the batch
+    re-solves fresh.  The engine handle holds immutable device arrays, so
+    residual mutations between dispatch and commit can never corrupt the
+    in-flight solve — only make it *stale*, which commit-time validation
+    (optimistic concurrency) or the epoch fence handles.
+
+    ``tag`` is opaque caller context carried dispatch-to-commit (the
+    streaming bench stores dispatch-time virtual clock / steady-phase
+    flags there).
+    """
+
+    dfs: list
+    metas: list
+    handle: Optional[engine.PendingBatchSolve]
+    epoch: int
+    tag: object = None
+    committed: bool = False
 
 
 class OnlinePlacer:
@@ -155,28 +187,47 @@ class OnlinePlacer:
         if use_kernel:
             solve_cfg = dict(solve_cfg, use_kernel=True)
         self.solve_cfg = solve_cfg
-        n = rg.n
-        self.cap = rg.cap.astype(np.float64).copy()
-        self.bw = rg.bw.astype(np.float64).copy()
-        self.node_up = np.ones(n, bool)
-        self.link_up = np.isfinite(rg.lat) & ~np.eye(n, dtype=bool)
+        self.res = ResidualState(rg)
         self.tickets: dict[int, Ticket] = {}
         self.stats = OnlineStats()
         self._tid = itertools.count()
 
     # -- residual view ------------------------------------------------------
+    # The residual arrays live in ResidualState (host float64 truth +
+    # device-resident float32 mirror); these read-only views keep the
+    # placer's public surface (tests, regional conservation, examples).
+
+    @property
+    def cap(self) -> np.ndarray:
+        return self.res.cap
+
+    @property
+    def bw(self) -> np.ndarray:
+        return self.res.bw
+
+    @property
+    def node_up(self) -> np.ndarray:
+        return self.res.node_up
+
+    @property
+    def link_up(self) -> np.ndarray:
+        return self.res.link_up
+
+    @property
+    def epoch(self) -> int:
+        """Staleness fence for in-flight optimistic batches: residual epoch
+        (liveness changes, rollbacks) plus the CompactedView version when
+        this is a region-local placer — regional churn invalidates the view,
+        which must also invalidate any batch solved on the old compaction."""
+        e = self.res.epoch
+        if self.view is not None:
+            e += self.view.version
+        return e
 
     def residual_graph(self) -> ResourceGraph:
         """The network the next solve sees: committed capacity subtracted,
         failed nodes/links removed (cap 0 / bw 0 / lat INF)."""
-        n = self.base.n
-        up2 = self.node_up[:, None] & self.node_up[None, :]
-        alive = self.link_up & up2
-        cap = np.where(self.node_up, self.cap, 0.0).astype(np.float32)
-        bw = np.where(alive, self.bw, 0.0).astype(np.float32)
-        lat = np.where(alive, self.base.lat, INF).astype(np.float32)
-        np.fill_diagonal(lat, 0.0)
-        return ResourceGraph(cap, bw, lat)
+        return self.res.residual_graph()
 
     def utilization(self) -> dict:
         base_cap = float(np.sum(self.base.cap))
@@ -192,10 +243,7 @@ class OnlinePlacer:
                 tenant: str = "", klass: int = 0) -> Ticket:
         node_load = _node_loads(df, mapping)
         edge_load = _edge_loads(df, mapping)
-        for v, c in node_load.items():
-            self.cap[v] -= c
-        for (u, v), b in edge_load.items():
-            self.bw[u, v] -= b
+        self.res.apply_load(node_load, edge_load, -1.0)
         t = Ticket(next(self._tid), df, mapping, node_load, edge_load,
                    tenant=tenant, klass=klass)
         self.tickets[t.tid] = t
@@ -213,10 +261,7 @@ class OnlinePlacer:
         """
         tid = ticket if isinstance(ticket, int) else ticket.tid
         t = self.tickets.pop(tid)
-        for v, c in t.node_load.items():
-            self.cap[v] += c
-        for (u, v), b in t.edge_load.items():
-            self.bw[u, v] += b
+        self.res.apply_load(t.node_load, t.edge_load, 1.0)
         if reason == "released":
             self.stats.released += 1
         elif reason == "preempted":
@@ -230,21 +275,18 @@ class OnlinePlacer:
         stats).  With :meth:`restore` this brackets speculative multi-step
         mutations — preemption probing, the defrag re-solve — so they either
         commit in full or leave no trace."""
-        return {
-            "cap": self.cap.copy(),
-            "bw": self.bw.copy(),
-            "node_up": self.node_up.copy(),
-            "link_up": self.link_up.copy(),
-            "tickets": dict(self.tickets),
-            "stats": dataclasses.replace(self.stats),
-        }
+        snap = self.res.snapshot()
+        snap["tickets"] = dict(self.tickets)
+        snap["stats"] = dataclasses.replace(self.stats)
+        return snap
 
     def restore(self, snap: dict) -> None:
-        """Roll back to a :meth:`snapshot` (the snapshot stays reusable)."""
-        self.cap = snap["cap"].copy()
-        self.bw = snap["bw"].copy()
-        self.node_up = snap["node_up"].copy()
-        self.link_up = snap["link_up"].copy()
+        """Roll back to a :meth:`snapshot` (the snapshot stays reusable).
+
+        The residual epoch advances — it is never rewound — so any batch
+        dispatched between snapshot and restore is fenced out: its results
+        are *invalidated* at commit, never optimistically applied."""
+        self.res.restore(snap)
         self.tickets = dict(snap["tickets"])
         self.stats = dataclasses.replace(snap["stats"])
 
@@ -353,11 +395,118 @@ class OnlinePlacer:
         # rollback (state restores, wall-clock and solve counts do not)
         solve_ms, solves, solve_n_sum = (
             self.stats.solve_ms, self.stats.solves, self.stats.solve_n_sum)
+        overhead_ms = self.stats.overhead_ms
+        conflict_ms = self.stats.conflict_resolve_ms
         self.restore(snap)
         self.stats.solve_ms = solve_ms
+        self.stats.overhead_ms = overhead_ms
+        self.stats.conflict_resolve_ms = conflict_ms
         self.stats.solves = solves
         self.stats.solve_n_sum = solve_n_sum
         return None, []
+
+    def _dispatch_solve(self, dfs: list[DataflowPath]) -> engine.PendingBatchSolve:
+        """Dispatch a batched solve for ``dfs`` against the current residual.
+
+        On natively-batching backends the DP consumes the device-resident
+        residual tensors (no O(n^2) host upload per micro-batch) and the
+        batch is bucketed to the next power of two so a churning arrival
+        process triggers at most log2(max batch) jit specializations per
+        request shape.  Other backends solve synchronously inside the
+        returned handle."""
+        cfg = self.solve_cfg
+        graph_tensors = None
+        if self.method in engine.BATCHED_METHODS:
+            cfg = dict(cfg, bucket_batch=True)
+            graph_tensors = self.res.device_tensors()
+        return engine.solve_batch_dispatch(
+            self.residual_graph(), list(dfs), method=self.method,
+            graph_tensors=graph_tensors, **cfg,
+        )
+
+    def dispatch_admit(
+        self,
+        dfs: list[DataflowPath],
+        metas: Optional[Sequence[tuple[str, int]]] = None,
+        *,
+        tag: object = None,
+    ) -> PendingAdmission:
+        """Start a micro-batch admission: dispatch the batched DP against a
+        residual snapshot and return without waiting.  The device solve runs
+        while the caller does host work (typically committing the previous
+        batch); :meth:`commit_admit` finishes the admission."""
+        dfs = list(dfs)
+        if metas is None:
+            metas = [("", 0)] * len(dfs)
+        if not dfs:
+            return PendingAdmission([], [], None, self.epoch, tag=tag)
+        self.stats.batches += 1
+        handle = self._dispatch_solve(dfs)
+        return PendingAdmission(dfs, list(metas), handle, self.epoch, tag=tag)
+
+    def commit_admit(self, pending: PendingAdmission) -> list[Optional[Ticket]]:
+        """Finish an in-flight admission: block on the solve (the only
+        ``block_until_ready`` point), validate every mapping against the
+        *current* residual, and commit.
+
+        Three staleness layers, cheapest first:
+
+        - epoch fence: if churn / restore / view invalidation happened since
+          dispatch, the whole in-flight solve is discarded (never committed)
+          and the batch re-solves fresh on the degraded network;
+        - per-request validation: a mapping invalidated by commits that
+          landed after dispatch (earlier in this batch, or — pipelined —
+          whole batches) is re-solved individually, the existing
+          optimistic-concurrency retry;
+        - endpoint liveness re-check, as in the synchronous path.
+        """
+        assert not pending.committed, "commit_admit consumed twice"
+        pending.committed = True
+        dfs, metas = pending.dfs, pending.metas
+        if not dfs:
+            return []
+        if pending.epoch != self.epoch:
+            # the network changed shape under the in-flight solve: results
+            # are unsalvageable (routes may cross dead elements in ways
+            # validation against residuals can't always see) — invalidate,
+            # re-solve on the current network
+            self.stats.stale_batches += 1
+            mappings, st = self._dispatch_solve(dfs).finalize()
+        else:
+            mappings, st = pending.handle.finalize()
+        self.stats.solve_ms += st.solve_ms
+        self.stats.solves += 1
+        self.stats.solve_n_sum += st.solve_n
+        t_host = time.perf_counter()
+        conflict_ms = 0.0
+        out: list[Optional[Ticket]] = []
+        current = self.residual_graph()
+        for df, m, (tenant, klass) in zip(dfs, mappings, metas):
+            if (
+                m is not None
+                and self.node_up[df.src]
+                and self.node_up[df.dst]
+                and self._admissible(df, m, current)
+            ):
+                self.stats.admitted += 1
+                out.append(self._commit(df, m, tenant=tenant, klass=klass))
+                current = self.residual_graph()
+            elif m is not None:
+                # stale snapshot (a commit since dispatch took the capacity)
+                # — optimistic-concurrency retry, individually
+                self.stats.batch_conflicts += 1
+                t0 = time.perf_counter()
+                t = self.admit(df, tenant=tenant, klass=klass)
+                conflict_ms += 1e3 * (time.perf_counter() - t0)
+                out.append(t)
+                if t is not None:
+                    current = self.residual_graph()
+            else:
+                self.stats.rejected += 1
+                out.append(None)
+        self.stats.conflict_resolve_ms += conflict_ms
+        self.stats.overhead_ms += 1e3 * (time.perf_counter() - t_host) - conflict_ms
+        return out
 
     def admit_many(
         self,
@@ -370,51 +519,39 @@ class OnlinePlacer:
         serialized, and any mapping invalidated by an earlier commit in the
         same batch is re-solved individually on the fresh residual.
 
-        On natively-batching backends the DP batch is bucketed to the next
-        power of two (``bucket_batch``: dummy tensor rows, never
-        reconstructed), so a churning arrival process triggers at most
-        log2(max batch) jit specializations per request shape instead of
-        one per distinct micro-batch size.
+        Exactly :meth:`dispatch_admit` immediately followed by
+        :meth:`commit_admit` — the depth-1 degenerate of the admission
+        pipeline, so the synchronous and pipelined paths cannot drift.
         """
         if not dfs:
             return []
-        if metas is None:
-            metas = [("", 0)] * len(dfs)
-        self.stats.batches += 1
-        snapshot = self.residual_graph()
-        cfg = self.solve_cfg
-        if self.method in engine.BATCHED_METHODS:
-            cfg = dict(cfg, bucket_batch=True)
-        mappings, st = engine.solve_batch(
-            snapshot, list(dfs), method=self.method, **cfg
+        return self.commit_admit(self.dispatch_admit(dfs, metas))
+
+    def warmup(self, *, max_batch: int = 32, p: int = 5) -> int:
+        """Pre-compile the jit specializations the admission path will hit:
+        the single-request DP (conflict re-solves / churn re-admissions) and
+        every power-of-two batch bucket up to ``max_batch``, for requests of
+        length ``p``.  Returns the largest warmed bucket (0 when the backend
+        has no jit path).  Solves run on the residual network but commit
+        nothing and touch no stats — cold-start compile spikes move here
+        instead of polluting the first admissions' latency.
+        """
+        if self.method not in engine.BATCHED_METHODS:
+            return 0
+        rg = self.residual_graph()
+        warm = DataflowPath.make(
+            np.zeros(p, np.float32), np.zeros(p - 1, np.float32),
+            src=0, dst=0,
         )
-        self.stats.solve_ms += st.solve_ms
-        self.stats.solves += 1
-        self.stats.solve_n_sum += st.solve_n
-        out: list[Optional[Ticket]] = []
-        current = snapshot  # refreshed only on commit (the only mutation)
-        for df, m, (tenant, klass) in zip(dfs, mappings, metas):
-            if (
-                m is not None
-                and self.node_up[df.src]
-                and self.node_up[df.dst]
-                and self._admissible(df, m, current)
-            ):
-                self.stats.admitted += 1
-                out.append(self._commit(df, m, tenant=tenant, klass=klass))
-                current = self.residual_graph()
-            elif m is not None:
-                # stale snapshot (an earlier commit in this batch took the
-                # capacity) — optimistic-concurrency retry, individually
-                self.stats.batch_conflicts += 1
-                t = self.admit(df, tenant=tenant, klass=klass)
-                out.append(t)
-                if t is not None:
-                    current = self.residual_graph()
-            else:
-                self.stats.rejected += 1
-                out.append(None)
-        return out
+        engine.solve(rg, warm, method=self.method, **self.solve_cfg)
+        warm_max = 1 << max(1, int(max_batch - 1).bit_length())
+        b = 1
+        while b <= warm_max:
+            engine.solve_batch(rg, [warm] * b, method=self.method,
+                               bucket_batch=True, **self.solve_cfg)
+            b *= 2
+        self.res.warm_deltas()  # the commit-side scatter-add buckets too
+        return warm_max
 
     # -- churn --------------------------------------------------------------
 
@@ -449,13 +586,15 @@ class OnlinePlacer:
         return remapped, dropped
 
     def fail_node(self, v: int) -> tuple[list[Ticket], list[Ticket]]:
-        """Take node ``v`` down; re-map every placement routed through it."""
-        self.node_up[v] = False
+        """Take node ``v`` down; re-map every placement routed through it.
+        Bumps the residual epoch: in-flight optimistic batches are fenced
+        out and will re-solve on the degraded network at commit."""
+        self.res.set_node_up(v, False)
         return self._remap(self._displaced(lambda t: v in t.mapping.route))
 
     def fail_link(self, u: int, v: int) -> tuple[list[Ticket], list[Ticket]]:
         """Take the (symmetric) link down; re-map placements using it."""
-        self.link_up[u, v] = self.link_up[v, u] = False
+        self.res.set_link_up(u, v, False)
         return self._remap(
             self._displaced(
                 lambda t: (u, v) in t.edge_load or (v, u) in t.edge_load
@@ -463,11 +602,11 @@ class OnlinePlacer:
         )
 
     def restore_node(self, v: int) -> None:
-        self.node_up[v] = True
+        self.res.set_node_up(v, True)
 
     def restore_link(self, u: int, v: int) -> None:
         up = np.isfinite(self.base.lat[u, v])
-        self.link_up[u, v] = self.link_up[v, u] = bool(up)
+        self.res.set_link_up(u, v, bool(up))
 
     # -- invariants ---------------------------------------------------------
 
@@ -489,3 +628,57 @@ class OnlinePlacer:
         )
         assert np.all(self.cap >= -atol), "negative residual capacity"
         assert np.all(self.bw >= -atol), "negative residual bandwidth"
+
+
+class AdmissionPipeline:
+    """Depth-bounded cross-batch admission pipeline over one placer.
+
+    ``push(dfs)`` dispatches a new micro-batch solve and commits the oldest
+    in-flight batch(es) once the window is full, so batch k+1's device DP
+    runs while batch k's results validate and commit on the host.  With
+    ``depth=1`` every push commits immediately — structurally identical to
+    :meth:`OnlinePlacer.admit_many` (the bit-identity the fuzz suite
+    enforces).  Deeper windows trade result staleness (more optimistic
+    conflicts, re-solved individually at commit) for dead-time: the host
+    never waits on a solve that hasn't had a full batch-interval to finish.
+
+    Commit order is FIFO — admission outcomes depend only on the order
+    batches *commit*, which matches the order they were pushed.
+    """
+
+    def __init__(self, placer: OnlinePlacer, depth: int = 1):
+        self.placer = placer
+        self.depth = max(1, int(depth))
+        self._q: collections.deque[PendingAdmission] = collections.deque()
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._q)
+
+    def push(
+        self,
+        dfs: list[DataflowPath],
+        metas: Optional[Sequence[tuple[str, int]]] = None,
+        *,
+        tag: object = None,
+    ) -> list[tuple[PendingAdmission, list[Optional[Ticket]]]]:
+        """Dispatch ``dfs``; commit whatever the window forces out.  Returns
+        ``(pending, tickets)`` for each batch committed by this call — the
+        pending carries the caller's dispatch-time ``tag``."""
+        if dfs:
+            self._q.append(self.placer.dispatch_admit(dfs, metas, tag=tag))
+        out = []
+        while len(self._q) >= self.depth:
+            out.append(self._commit_oldest())
+        return out
+
+    def flush(self) -> list[tuple[PendingAdmission, list[Optional[Ticket]]]]:
+        """Commit every in-flight batch (end of stream / barrier)."""
+        out = []
+        while self._q:
+            out.append(self._commit_oldest())
+        return out
+
+    def _commit_oldest(self):
+        pending = self._q.popleft()
+        return pending, self.placer.commit_admit(pending)

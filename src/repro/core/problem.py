@@ -63,7 +63,8 @@ def finite_lat(rg: ResourceGraph) -> np.ndarray:
     return lat
 
 
-def problem_tensors(rg: ResourceGraph, df: DataflowPath) -> dict:
+def problem_tensors(rg: ResourceGraph, df: DataflowPath,
+                    graph_tensors: dict | None = None) -> dict:
     """Dense float32 tensors for the DP/kernels. INF replaced by BIG.
 
     Region-local (compacted) problems reach here already sized ``n_r``:
@@ -71,14 +72,26 @@ def problem_tensors(rg: ResourceGraph, df: DataflowPath) -> dict:
     graph/request up front, and :func:`stack_requests` accepts a ``view``
     for direct batched-tensor callers — one compaction path, owned by
     :mod:`repro.core.compact`.
+
+    ``graph_tensors`` (``{cap, bw, lat}`` jnp arrays, e.g. from
+    :meth:`repro.core.residual.ResidualState.device_tensors`) substitutes
+    already-device-resident network tensors for the host upload — the
+    pipelined admission path passes these so each micro-batch dispatch
+    ships only the O(p) request tensors, never the O(n^2) network.
     """
     import jax.numpy as jnp  # deferred: numpy-only callers never touch jax
 
     s = creq_prefix(df).astype(np.float32)
+    if graph_tensors is None:
+        graph_tensors = dict(
+            cap=jnp.asarray(rg.cap),
+            bw=jnp.asarray(rg.bw),
+            lat=jnp.asarray(finite_lat(rg)),
+        )
     return dict(
-        cap=jnp.asarray(rg.cap),
-        bw=jnp.asarray(rg.bw),
-        lat=jnp.asarray(finite_lat(rg)),
+        cap=graph_tensors["cap"],
+        bw=graph_tensors["bw"],
+        lat=graph_tensors["lat"],
         prefix=jnp.asarray(s),  # (p+1,)
         breq=jnp.asarray(df.breq.astype(np.float32)),  # (p-1,)
         src=jnp.asarray(df.src, jnp.int32),
@@ -106,7 +119,8 @@ def pad_request(df: DataflowPath, p_max: int) -> tuple[np.ndarray, np.ndarray]:
 
 
 def stack_requests(rg: ResourceGraph, dfs: list[DataflowPath],
-                   pad_to: int | None = None, *, view=None) -> tuple[dict, int]:
+                   pad_to: int | None = None, *, view=None,
+                   graph_tensors: dict | None = None) -> tuple[dict, int]:
     """Stack mixed-``p`` requests against one shared resource network into
     the batched tensor dict for the batched DP.  Returns (tensors, p_max);
     link matrices are shared (axis None under vmap), per-request tensors are
@@ -121,11 +135,15 @@ def stack_requests(rg: ResourceGraph, dfs: list[DataflowPath],
     ``view`` compacts a global problem into the view's local id space: the
     node dimension of every stacked tensor pads to the region-local
     ``n_r``, not the global ``n`` (see :mod:`repro.core.compact`).
+
+    ``graph_tensors`` injects device-resident ``{cap, bw, lat}`` (already in
+    whatever id space ``dfs`` use — incompatible with ``view`` compaction).
     """
     import jax.numpy as jnp
 
     assert dfs
     if view is not None:
+        assert graph_tensors is None, "view compaction vs device tensors"
         rg = view.compact_graph(rg)
         dfs = [view.compact_df(d) for d in dfs]
     reqs = list(dfs)
@@ -134,7 +152,7 @@ def stack_requests(rg: ResourceGraph, dfs: list[DataflowPath],
         reqs += [reqs[-1]] * (pad_to - len(reqs))
     p_max = max(d.p for d in reqs)
     padded = [pad_request(d, p_max) for d in reqs]
-    base = problem_tensors(rg, reqs[0])
+    base = problem_tensors(rg, reqs[0], graph_tensors=graph_tensors)
     tensors = dict(
         cap=base["cap"],
         bw=base["bw"],

@@ -1,0 +1,200 @@
+"""Device-resident residual tensors with a versioned host mirror.
+
+:class:`ResidualState` is the single owner of the online placer's residual
+capacity/bandwidth state.  The float64 host arrays remain the source of
+truth — every commit/release mutates them immediately, and validation at
+commit time always reads them — but the float32 tensors the batched DP
+consumes (``cap``/``bw``/``lat`` with liveness applied) are kept *device
+resident*: commits accumulate into a small delta buffer that is applied as
+one scatter-add the next time a solve is dispatched, instead of re-uploading
+the full O(n^2) residual every micro-batch.
+
+Two counters version the state:
+
+- ``version`` bumps on **every** host mutation (commit, release, liveness
+  change, restore).  Cheap cache key for anything derived from residuals.
+- ``epoch`` bumps only on events that make an in-flight optimistic solve
+  *unsalvageable*: liveness changes (``fail_node``/``fail_link``/restores)
+  and :meth:`restore` rollbacks.  Plain commits/releases do NOT bump it —
+  an in-flight batch solved against a slightly older residual is still
+  usable because every mapping is re-validated against the host residual
+  before committing (the existing optimistic-concurrency hook).  ``epoch``
+  is monotone and never restored from a snapshot, so a stale in-flight
+  solve can never be made to look fresh by a rollback.
+
+Float32 drift: the device tensors are updated incrementally in float32
+while the host accumulates in float64, so after many commits they can
+differ from a fresh ``float32(host)`` round-trip by a few ulps.  That is
+safe by construction — the DP only *proposes* mappings; host-side
+``validate_mapping`` against the float64 truth gates every commit, and a
+proposal the drifted tensors made infeasible-looking merely costs a
+conflict re-solve.  Liveness changes drop the device cache entirely (they
+rewrite ``lat`` semantics, not just magnitudes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import INF, ResourceGraph
+from .problem import finite_lat
+
+
+def _pow2_pad(arr: np.ndarray) -> np.ndarray:
+    """Zero-pad a 1-d scatter operand to the next power-of-two length.
+
+    Padding appends index 0 / value 0.0 pairs, which are no-ops under
+    scatter-*add* — the point is shape stability: delta sizes vary per
+    commit, and an unpadded update would jit-compile one executable per
+    distinct length instead of O(log n) bucketed ones."""
+    k = len(arr)
+    m = 1 << max(0, int(k - 1).bit_length())
+    if m == k:
+        return arr
+    return np.concatenate([arr, np.zeros(m - k, arr.dtype)])
+
+
+class ResidualState:
+    """Residual capacity/bandwidth of one resource network: float64 host
+    truth + lazily synchronized float32 device tensors + staleness fences."""
+
+    def __init__(self, base: ResourceGraph):
+        self.base = base
+        n = base.n
+        self.cap = base.cap.astype(np.float64).copy()
+        self.bw = base.bw.astype(np.float64).copy()
+        self.node_up = np.ones(n, bool)
+        self.link_up = np.isfinite(base.lat) & ~np.eye(n, dtype=bool)
+        self.version = 0  # bumps on every host mutation
+        self.epoch = 0  # bumps only when in-flight solves become invalid
+        self._dev: dict | None = None  # {"cap","bw","lat"} jnp tensors
+        self._node_delta: dict[int, float] = {}  # node -> pending cap delta
+        self._edge_delta: dict[tuple, float] = {}  # (u,v) -> pending bw delta
+
+    # -- host truth ---------------------------------------------------------
+
+    def residual_graph(self) -> ResourceGraph:
+        """The network the next solve sees: committed capacity subtracted,
+        failed nodes/links removed (cap 0 / bw 0 / lat INF)."""
+        up2 = self.node_up[:, None] & self.node_up[None, :]
+        alive = self.link_up & up2
+        cap = np.where(self.node_up, self.cap, 0.0).astype(np.float32)
+        bw = np.where(alive, self.bw, 0.0).astype(np.float32)
+        lat = np.where(alive, self.base.lat, INF).astype(np.float32)
+        np.fill_diagonal(lat, 0.0)
+        return ResourceGraph(cap, bw, lat)
+
+    def apply_load(self, node_load: dict, edge_load: dict, sign: float) -> None:
+        """Commit (``sign=-1``) or release (``sign=+1``) a ticket's loads.
+
+        Host arrays update immediately; the device mirror accumulates the
+        delta and applies it as one scatter-add at the next dispatch."""
+        for v, c in node_load.items():
+            d = sign * c
+            self.cap[v] += d
+            if self._dev is not None and self.node_up[v]:
+                self._node_delta[v] = self._node_delta.get(v, 0.0) + d
+        for (u, v), b in edge_load.items():
+            d = sign * b
+            self.bw[u, v] += d
+            if self._dev is not None and self.link_up[u, v]:
+                key = (u, v)
+                self._edge_delta[key] = self._edge_delta.get(key, 0.0) + d
+        self.version += 1
+
+    # -- liveness (drops the device cache: lat changes shape of the problem)
+
+    def set_node_up(self, v: int, up: bool) -> None:
+        self.node_up[v] = up
+        self._invalidate()
+
+    def set_link_up(self, u: int, v: int, up: bool) -> None:
+        self.link_up[u, v] = self.link_up[v, u] = up
+        self._invalidate()
+
+    def _invalidate(self) -> None:
+        """Liveness changed or state rolled back: fence out in-flight solves
+        and force a full device re-upload on the next dispatch."""
+        self.version += 1
+        self.epoch += 1
+        self._dev = None
+        self._node_delta.clear()
+        self._edge_delta.clear()
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def snapshot(self) -> dict:
+        return {
+            "cap": self.cap.copy(),
+            "bw": self.bw.copy(),
+            "node_up": self.node_up.copy(),
+            "link_up": self.link_up.copy(),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Roll back to a snapshot.  ``epoch`` advances (never rewinds): any
+        solve dispatched between snapshot and restore stays stale forever."""
+        self.cap = snap["cap"].copy()
+        self.bw = snap["bw"].copy()
+        self.node_up = snap["node_up"].copy()
+        self.link_up = snap["link_up"].copy()
+        self._invalidate()
+
+    # -- device mirror ------------------------------------------------------
+
+    def warm_deltas(self) -> None:
+        """Pre-compile the pow2-bucketed scatter-add executables by pushing
+        zero-valued (no-op) deltas of every bucket size through the update
+        path.  Residuals, ``version`` and ``epoch`` are untouched — this
+        exists so the first *real* commits after a cold start don't pay the
+        per-shape jit (the same reason :meth:`OnlinePlacer.warmup` exists
+        for the DP buckets)."""
+        self.device_tensors()  # materialize the mirror (full-upload path)
+        n = self.base.n
+        pairs = [(u, v) for u in range(n) for v in range(n) if u != v]
+        k = 1
+        while k <= min(4 * n, len(pairs)):
+            self._node_delta = {v: 0.0 for v in range(min(k, n))}
+            self._edge_delta = {pairs[i]: 0.0 for i in range(k)}
+            self.device_tensors()
+            k *= 2
+
+    def device_tensors(self) -> dict:
+        """Float32 jnp ``{cap, bw, lat}`` of the current residual network.
+
+        Full upload when the cache was dropped (construction, liveness
+        change, restore); otherwise one scatter-add per tensor over the
+        pending commit/release deltas."""
+        import jax.numpy as jnp  # deferred: numpy-only backends never touch jax
+
+        if self._dev is None:
+            rg = self.residual_graph()
+            self._dev = dict(
+                cap=jnp.asarray(rg.cap),
+                bw=jnp.asarray(rg.bw),
+                lat=jnp.asarray(finite_lat(rg)),
+            )
+            self._node_delta.clear()
+            self._edge_delta.clear()
+            return self._dev
+        # delta lengths are padded to the next power of two (pad entries add
+        # 0.0 at index 0 — a no-op under scatter-ADD), so the jitted update
+        # compiles O(log n) shape specializations, not one per delta size
+        if self._node_delta:
+            idx = _pow2_pad(np.fromiter(
+                self._node_delta, np.int32, len(self._node_delta)))
+            val = _pow2_pad(np.fromiter(
+                self._node_delta.values(), np.float32, len(self._node_delta)))
+            self._dev["cap"] = self._dev["cap"].at[jnp.asarray(idx)].add(
+                jnp.asarray(val))
+            self._node_delta.clear()
+        if self._edge_delta:
+            us = _pow2_pad(
+                np.array([u for u, _ in self._edge_delta], np.int32))
+            vs = _pow2_pad(
+                np.array([v for _, v in self._edge_delta], np.int32))
+            val = _pow2_pad(np.fromiter(
+                self._edge_delta.values(), np.float32, len(self._edge_delta)))
+            self._dev["bw"] = self._dev["bw"].at[
+                jnp.asarray(us), jnp.asarray(vs)].add(jnp.asarray(val))
+            self._edge_delta.clear()
+        return self._dev

@@ -106,6 +106,7 @@ class ControlPlane:
         max_attempts: int = 8,
         preempt: bool = True,
         preempt_budget: Optional[float] = None,
+        pipeline_depth: int = 1,
         method: str = "leastcost_jax",
         use_kernel: bool = False,
         view=None,
@@ -115,7 +116,15 @@ class ControlPlane:
         this a *region-local* plane: the placer compacts ``rg`` through it
         so all state and every solve is sized to the view's ``n_r``; all
         submitted dataflows must already be in the view's local id space
-        (the regional broker translates at its boundary)."""
+        (the regional broker translates at its boundary).
+
+        ``pipeline_depth`` bounds the admission pipeline: each
+        :meth:`pump` round *dispatches* its micro-batch solve immediately
+        but only *commits* once the in-flight window reaches the depth, so
+        batch k+1's device DP overlaps batch k's validation/commit.  Depth
+        1 (default) is the synchronous path, bit for bit.  In-flight
+        batches persist across ``pump`` calls (``conservation()`` counts
+        them); :meth:`flush` forces them all to commit."""
         assert int(regions) <= 1, "regions > 1 is dispatched in __new__"
         self.placer = OnlinePlacer(
             rg, method=method, use_kernel=use_kernel, view=view, **solve_cfg
@@ -125,6 +134,10 @@ class ControlPlane:
         self.max_attempts = int(max_attempts)
         self.preempt = bool(preempt)
         self.preempt_budget = preempt_budget
+        self.pipeline_depth = max(1, int(pipeline_depth))
+        # (picked requests, PendingAdmission) windows dispatched but not yet
+        # committed — FIFO, survives across pump calls
+        self._inflight: collections.deque = collections.deque()
         self.tenants: dict[str, TenantState] = {}
         self.active: dict[int, tuple[Request, Ticket]] = {}  # by rid
         self._rid_of_tid: dict[int, int] = {}
@@ -203,18 +216,23 @@ class ControlPlane:
 
     def conservation(self) -> dict[str, int]:
         """The ticket ledger; ``ok`` iff every submitted request is in
-        exactly one terminal/live state."""
+        exactly one terminal/live state.  ``in_flight`` counts requests
+        popped from their queues into a dispatched-but-uncommitted pipeline
+        window — a live state of its own until the window commits."""
         queued = sum(len(st.queue) for st in self.tenants.values())
         released = sum(st.released for st in self.tenants.values())
         dropped = sum(st.dropped for st in self.tenants.values())
         submitted = sum(st.submitted for st in self.tenants.values())
+        in_flight = sum(len(picked) for picked, _ in self._inflight)
         return {
             "submitted": submitted,
             "queued": queued,
+            "in_flight": in_flight,
             "active": len(self.active),
             "released": released,
             "dropped": dropped,
-            "ok": submitted == queued + len(self.active) + released + dropped,
+            "ok": submitted
+            == queued + in_flight + len(self.active) + released + dropped,
         }
 
     # -- admission -----------------------------------------------------------
@@ -314,6 +332,14 @@ class ControlPlane:
         without any global view.  Admission itself still validates against
         this plane's own residual only — stale estimates can skew the drain
         order, never over-commit capacity.
+
+        With ``pipeline_depth > 1`` each round dispatches its micro-batch
+        and commits only the rounds the window forces out; the rest stay
+        in flight (returned by a later ``pump`` or :meth:`flush`).  The
+        fairness selection then reads committed capacity that may lag by
+        up to ``depth - 1`` windows — the same staleness-for-latency trade
+        the gossiped regional shares make, and with the same safety net:
+        the drain order can skew, admission never over-commits.
         """
         admitted: list[Ticket] = []
         cfgs = {t: st.cfg for t, st in self.tenants.items()}
@@ -332,20 +358,41 @@ class ControlPlane:
                 q = self.tenants[r.tenant].queue
                 assert q[0] is r, "policy must select queue heads in order"
                 q.popleft()
-            tickets = self.placer.admit_many(
+            pending = self.placer.dispatch_admit(
                 [r.df for r in picked],
                 metas=[(r.tenant, r.klass) for r in picked],
             )
-            for r, t in zip(picked, tickets):
-                if t is not None:
-                    self._activate(r, t)
-                    admitted.append(t)
-                else:
-                    t2 = self._handle_reject(r)
-                    if t2 is not None:
-                        admitted.append(t2)
+            self._inflight.append((picked, pending))
+            while len(self._inflight) >= self.pipeline_depth:
+                admitted.extend(self._commit_oldest())
         # a later preemption in the same pump may have displaced an earlier
         # admission: hand back only handles that are still live
+        return [t for t in admitted if self.placer.tickets.get(t.tid) is t]
+
+    def _commit_oldest(self) -> list[Ticket]:
+        """Commit the oldest in-flight window: block on its solve, then
+        activate / reject-handle each request exactly as the synchronous
+        path does."""
+        picked, pending = self._inflight.popleft()
+        tickets = self.placer.commit_admit(pending)
+        out: list[Ticket] = []
+        for r, t in zip(picked, tickets):
+            if t is not None:
+                self._activate(r, t)
+                out.append(t)
+            else:
+                t2 = self._handle_reject(r)
+                if t2 is not None:
+                    out.append(t2)
+        return out
+
+    def flush(self) -> list[Ticket]:
+        """Commit every in-flight pipeline window (barrier).  Returns the
+        still-live tickets it admitted.  Call before anything that needs
+        the full picture of committed state — defrag does this itself."""
+        admitted: list[Ticket] = []
+        while self._inflight:
+            admitted.extend(self._commit_oldest())
         return [t for t in admitted if self.placer.tickets.get(t.tid) is t]
 
     # -- release / churn ------------------------------------------------------
@@ -458,6 +505,9 @@ class ControlPlane:
         """Global re-optimization of the standing set (``service.defrag``),
         retrying queued requests on the re-packed network.  Atomic: on a
         non-improving pass nothing changes."""
+        # the re-pack must see the whole standing set, and its
+        # snapshot/restore would fence out any in-flight window anyway
+        self.flush()
         extras = self._fair_queue_heads(max_extras)
         result = defrag_mod.defrag(
             self.placer,
@@ -484,19 +534,38 @@ class ControlPlane:
         s.preemptions = st.preempted
         s.defrag_rounds = st.defrag_rounds
         s.solve_ms = st.solve_ms
+        s.overhead_ms = st.overhead_ms
+        s.conflict_resolve_ms = st.conflict_resolve_ms
+        s.stale_batches = st.stale_batches
         s.batch_size = self.micro_batch
         return s
+
+    def warmup(self, *, max_batch: Optional[int] = None, p: int = 5) -> int:
+        """Pre-compile the jit buckets admission will hit (delegates to
+        :meth:`OnlinePlacer.warmup`); ``max_batch`` defaults to the
+        micro-batch size."""
+        return self.placer.warmup(
+            max_batch=self.micro_batch if max_batch is None else max_batch,
+            p=p,
+        )
 
     def fairness_report(self) -> dict:
         """Actual standing shares vs weighted max-min targets (the shared
         :func:`policy.fairness_summary` definition)."""
         from .policy import fairness_summary
 
-        return fairness_summary(
+        rep = fairness_summary(
             self.committed_capacity(),
             self.queued_demand(),
             {t: st.cfg.weight for t, st in self.tenants.items()},
         )
+        st = self.placer.stats
+        rep["timing"] = {
+            "solve_ms": st.solve_ms,
+            "overhead_ms": st.overhead_ms,
+            "conflict_resolve_ms": st.conflict_resolve_ms,
+        }
+        return rep
 
     def check_invariants(self) -> None:
         """Placer conservation + the control-plane ledger."""

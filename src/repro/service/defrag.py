@@ -117,10 +117,14 @@ def defrag(
     repacked = ok and obj_after > obj_before
     # speculative solves did real work: solve accounting survives rollback
     solve_ms = placer.stats.solve_ms
+    overhead_ms = placer.stats.overhead_ms
+    conflict_ms = placer.stats.conflict_resolve_ms
     solves, solve_n_sum = placer.stats.solves, placer.stats.solve_n_sum
     if not repacked:
         placer.restore(snap)
         placer.stats.solve_ms = solve_ms
+        placer.stats.overhead_ms = overhead_ms
+        placer.stats.conflict_resolve_ms = conflict_ms
         placer.stats.solves, placer.stats.solve_n_sum = solves, solve_n_sum
         # fallback: keep the standing placement, retry the extras on the
         # current residual (probe rejections are not service rejections)
@@ -143,6 +147,8 @@ def defrag(
     # release/re-admit churn vanishes and only the net effect remains
     stats = dataclasses.replace(snap["stats"])
     stats.solve_ms = solve_ms
+    stats.overhead_ms = overhead_ms
+    stats.conflict_resolve_ms = conflict_ms
     stats.solves, stats.solve_n_sum = solves, solve_n_sum
     stats.admitted += len(readmitted)
     stats.defrag_rounds += 1

@@ -351,6 +351,7 @@ class RegionalControlPlane:
         max_attempts: int = 8,
         preempt: bool = True,
         preempt_budget: Optional[float] = None,
+        pipeline_depth: int = 1,
         method: str = "leastcost_jax",
         use_kernel: bool = False,
         fanout: int = 2,
@@ -381,6 +382,7 @@ class RegionalControlPlane:
         self.max_attempts = int(max_attempts)
         self.preempt = bool(preempt)
         self.preempt_budget = preempt_budget
+        self.pipeline_depth = max(1, int(pipeline_depth))
         self.method = method
         self.max_cut_attempts = int(max_cut_attempts)
         # the compacted solve substrate: one global<->local bijection per
@@ -398,6 +400,7 @@ class RegionalControlPlane:
                 max_attempts=max_attempts,
                 preempt=preempt,
                 preempt_budget=preempt_budget,
+                pipeline_depth=pipeline_depth,
                 method=method,
                 use_kernel=use_kernel,
                 **solve_cfg,
@@ -553,8 +556,8 @@ class RegionalControlPlane:
         """The global ticket ledger: regional ledgers + the broker's
         spanning ledger.  ``ok`` iff every submitted request is in exactly
         one state *summed over regions*."""
-        agg = {"submitted": 0, "queued": 0, "active": 0, "released": 0,
-               "dropped": 0}
+        agg = {"submitted": 0, "queued": 0, "in_flight": 0, "active": 0,
+               "released": 0, "dropped": 0}
         for cp in self.regions:
             led = cp.conservation()
             for k in agg:
@@ -569,7 +572,8 @@ class RegionalControlPlane:
         agg["dropped"] += sum(
             st.dropped for st in self.span_tenants.values())
         agg["ok"] = agg["submitted"] == (
-            agg["queued"] + agg["active"] + agg["released"] + agg["dropped"]
+            agg["queued"] + agg["in_flight"] + agg["active"]
+            + agg["released"] + agg["dropped"]
         )
         return agg
 
@@ -624,6 +628,28 @@ class RegionalControlPlane:
         ]
         live += [s for s in spanned if s.rid in self._span_active]
         return live
+
+    def flush(self) -> list[Ticket]:
+        """Commit every region's in-flight pipeline windows (barrier); see
+        :meth:`ControlPlane.flush`.  The broker's spanning 2PC needs no
+        flush of its own — it reserves host-side through ``placer.admit``,
+        and an in-flight regional batch that loses capacity to a spanning
+        reservation simply re-solves its conflicts at commit."""
+        admitted: list[Ticket] = []
+        for cp in self.regions:
+            admitted += cp.flush()
+        return [
+            t for t in admitted
+            if any(cp.placer.tickets.get(t.tid) is t for cp in self.regions)
+        ]
+
+    def warmup(self, *, max_batch: Optional[int] = None, p: int = 5) -> int:
+        """Pre-compile each region's jit buckets (region-local ``n_r``
+        shapes differ per region, so every placer warms its own)."""
+        return max(
+            (cp.warmup(max_batch=max_batch, p=p) for cp in self.regions),
+            default=0,
+        )
 
     def _pump_spanning(self) -> list[SpanningTicket]:
         if self.R <= 1:
@@ -1157,6 +1183,12 @@ class RegionalControlPlane:
         s.defrag_rounds = sum(
             cp.placer.stats.defrag_rounds for cp in self.regions)
         s.solve_ms = sum(cp.placer.stats.solve_ms for cp in self.regions)
+        s.overhead_ms = sum(
+            cp.placer.stats.overhead_ms for cp in self.regions)
+        s.conflict_resolve_ms = sum(
+            cp.placer.stats.conflict_resolve_ms for cp in self.regions)
+        s.stale_batches = sum(
+            cp.placer.stats.stale_batches for cp in self.regions)
         s.batch_size = self.micro_batch
         s.rounds = self.bus.rounds
         s.gossip_messages = self.bus.messages_sent
@@ -1220,6 +1252,14 @@ class RegionalControlPlane:
             {t: st.cfg.weight for t, st in self.span_tenants.items()},
         )
         rep["coordination"] = self.coordination_report()
+        rep["timing"] = {
+            "solve_ms": sum(
+                cp.placer.stats.solve_ms for cp in self.regions),
+            "overhead_ms": sum(
+                cp.placer.stats.overhead_ms for cp in self.regions),
+            "conflict_resolve_ms": sum(
+                cp.placer.stats.conflict_resolve_ms for cp in self.regions),
+        }
         return rep
 
     def check_invariants(self) -> None:

@@ -382,20 +382,24 @@ def _fuzz_plane(cp, rg, seed, steps=60, df_gen=None):
             for res in cp.defrag():
                 assert res.objective_after >= res.objective_before
         cp.check_invariants()
+    # mid-stream the ledger already accounts for in-flight batches; drain
+    # the pipeline so the end-state equality below is exact
+    cp.flush()
+    cp.check_invariants()
     led = cp.conservation()
-    assert led["ok"]
+    assert led["ok"] and led["in_flight"] == 0
     assert led["submitted"] == (
         led["queued"] + led["active"] + led["released"] + led["dropped"]
     )
     return led
 
 
-def _fresh_regional(R, seed, fanout=2, gossip_period=1):
+def _fresh_regional(R, seed, fanout=2, gossip_period=1, **kw):
     rg = waxman(14, seed=4)
     cp = RegionalControlPlane(
         rg, regions=R, micro_batch=6, max_attempts=3, seed=seed,
         fanout=fanout, gossip_period=gossip_period,
-        policy=FairSharePolicy(slack=0.4), **PYM,
+        policy=FairSharePolicy(slack=0.4), **PYM, **kw,
     )
     cp.register_tenant("a", weight=3.0)
     cp.register_tenant("b", weight=1.0)
@@ -409,6 +413,41 @@ def test_fuzz_regional_conservation(R, seed):
     rg, cp = _fresh_regional(R, seed)
     led = _fuzz_plane(cp, rg, seed)
     assert led["submitted"] > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_regional_conservation_pipelined(seed):
+    """Depth-2 admission windows in every region: optimistic local batches
+    outstanding across pumps, spanning 2PC interleaved, same invariants."""
+    rg, cp = _fresh_regional(2, seed, pipeline_depth=2)
+    led = _fuzz_plane(cp, rg, seed)
+    assert led["submitted"] > 0
+
+
+def test_spanning_2pc_tolerates_in_flight_batch():
+    """The broker's 2PC reserves host-side (bumping the residual *version*,
+    not the staleness *epoch*), so a spanning admission while a local batch
+    is optimistically in flight just makes that batch's commit re-validate —
+    nothing deadlocks, nothing overcommits."""
+    rg, cp = _regional(pipeline_depth=2)
+    intra = [(u, v) for (u, v) in rg.edges()
+             if cp.region_of[u] == cp.region_of[v]]
+    assert intra, "no intra-region edge; instance too partitioned"
+    u, v = intra[0]
+    cp.submit("a", DataflowPath.make([0.1, 0.1], [0.5], src=u, dst=v))
+    assert cp.pump() == []  # parked in the region's depth-2 window
+    assert cp.conservation()["in_flight"] == 1
+
+    rid = cp.submit("a", _spanning_df(cp))
+    (t,) = cp.pump()  # 2PC completes around the outstanding batch
+    assert t.rid == rid
+    assert cp.conservation()["in_flight"] == 1  # local batch still parked
+    cp.check_invariants()
+
+    cp.flush()
+    led = cp.conservation()
+    assert led["ok"] and led["in_flight"] == 0 and led["active"] >= 1
+    cp.check_invariants()
 
 
 @pytest.mark.slow

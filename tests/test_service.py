@@ -473,12 +473,13 @@ def test_engine_stats_surface_service_counters():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("seed", [0, 1])
-def test_fuzz_interleavings_conserve_tickets_and_capacity(seed):
+@pytest.mark.parametrize(("seed", "depth"), [(0, 1), (1, 1), (0, 2), (1, 3)])
+def test_fuzz_interleavings_conserve_tickets_and_capacity(seed, depth):
     rng = np.random.default_rng(seed)
     rg = waxman(12, seed=4)
     cp = ControlPlane(rg, micro_batch=6, max_attempts=3,
-                      policy=FairSharePolicy(slack=0.4), **PYM)
+                      policy=FairSharePolicy(slack=0.4),
+                      pipeline_depth=depth, **PYM)
     cp.register_tenant("a", weight=3.0)
     cp.register_tenant("b", weight=1.0)
     cp.register_tenant("c", weight=2.0, budget=1.5)
@@ -530,9 +531,15 @@ def test_fuzz_interleavings_conserve_tickets_and_capacity(seed):
         # EVERY step: capacity conservation + the ticket ledger
         cp.check_invariants()
 
-    # end state: the ledger adds up and nothing was silently lost
+    # mid-stream the ledger must account for in-flight optimistic batches
     ledger = cp.conservation()
     assert ledger["ok"]
+    # end state: drain the pipeline, then the ledger adds up exactly and
+    # nothing was silently lost
+    cp.flush()
+    cp.check_invariants()
+    ledger = cp.conservation()
+    assert ledger["ok"] and ledger["in_flight"] == 0
     assert ledger["submitted"] == (
         ledger["queued"] + ledger["active"] + ledger["released"]
         + ledger["dropped"]
@@ -542,3 +549,68 @@ def test_fuzz_interleavings_conserve_tickets_and_capacity(seed):
     assert sum(st.preempted for st in cp.tenants.values()) >= (
         cp.placer.stats.preempted
     )
+
+
+# ---------------------------------------------------------------------------
+# pipelined admission: in-flight ledger, flush barrier, timing split
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_holds_batches_in_flight_until_window_full():
+    rg = waxman(12, seed=4)
+    cp = ControlPlane(rg, micro_batch=4, pipeline_depth=3, **PYM)
+    cp.register_tenant("a")
+    for i in range(4):
+        cp.submit("a", random_dataflow(rg, 4, seed=100 + i,
+                                       creq_range=(0.05, 0.2),
+                                       breq_range=(0.5, 2.0)))
+    admitted = cp.pump(rounds=1)
+    # depth=3 window: the single dispatched batch stays optimistic
+    assert admitted == []
+    ledger = cp.conservation()
+    assert ledger["ok"] and ledger["in_flight"] == 4
+    assert len(cp.active) == 0
+    cp.check_invariants()
+
+    # the barrier commits everything and returns the live tickets
+    tickets = cp.flush()
+    assert len(tickets) >= 1
+    ledger = cp.conservation()
+    assert ledger["ok"] and ledger["in_flight"] == 0
+    assert ledger["active"] == len(tickets) == len(cp.active)
+    cp.check_invariants()
+
+
+def test_pipeline_defrag_flushes_first():
+    rg = waxman(12, seed=4)
+    cp = ControlPlane(rg, micro_batch=4, pipeline_depth=2, **PYM)
+    cp.register_tenant("a")
+    for i in range(3):
+        cp.submit("a", random_dataflow(rg, 4, seed=200 + i,
+                                       creq_range=(0.05, 0.2),
+                                       breq_range=(0.5, 2.0)))
+    cp.pump(rounds=1)
+    assert cp.conservation()["in_flight"] == 3
+    res = cp.defrag()  # must drain the window before re-solving globally
+    assert cp.conservation()["in_flight"] == 0
+    assert res.objective_after >= res.objective_before
+    cp.check_invariants()
+
+
+def test_timing_split_reaches_reports():
+    rg = waxman(12, seed=4)
+    cp = ControlPlane(rg, micro_batch=4, **PYM)
+    cp.register_tenant("a")
+    for i in range(4):
+        cp.submit("a", random_dataflow(rg, 4, seed=300 + i,
+                                       creq_range=(0.05, 0.2),
+                                       breq_range=(0.5, 2.0)))
+    cp.pump()
+    es = cp.engine_stats()
+    # host-side validate/reserve/commit time is split out from device solve
+    assert es.overhead_ms > 0.0
+    assert es.conflict_resolve_ms >= 0.0
+    assert es.stale_batches == 0
+    timing = cp.fairness_report()["timing"]
+    assert set(timing) == {"solve_ms", "overhead_ms", "conflict_resolve_ms"}
+    assert timing["overhead_ms"] == es.overhead_ms
