@@ -335,6 +335,16 @@ def run_regional(
                 == pumps * x["R"] * min(x["fanout"], x["R"] - 1)
                 for x in points
             ),
+            # payload accounting: every gossip message carries at most R
+            # records (a region pushes its whole view, never more), so the
+            # per-round record volume is O(R * fanout) records — bandwidth
+            # scales with the region count, not with node count or time
+            "gossip_payload_O_R_fanout_records": all(
+                x["coordination"]["gossip"]["records_per_message"] <= x["R"]
+                and x["coordination"]["gossip"]["records_per_round"]
+                <= x["R"] * min(x["fanout"], x["R"] - 1) * x["R"]
+                for x in points if x["R"] > 1
+            ),
             "compacted_solve_n_le_balanced": bool(size_ok),
             "solve_n_slack": slack,
             "solve_size_reduction_at_gate": (

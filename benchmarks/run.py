@@ -15,7 +15,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_kernel, bench_messages, bench_optimality, bench_placement,
-        bench_scaling,
+        bench_scaling, bench_trace,
     )
 
     suites = [
@@ -23,9 +23,10 @@ def main() -> None:
             n_instances=10 if args.quick else 40)),
         ("messages", lambda: bench_messages.run(
             n_instances=8 if args.quick else 25)),
-        ("scaling", bench_scaling.run),
+        ("scaling", lambda: bench_scaling.run(smoke=args.quick)),
         ("kernel", bench_kernel.run),
         ("placement", bench_placement.run),
+        ("trace", lambda: bench_trace.run(smoke=True)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

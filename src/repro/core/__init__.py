@@ -59,5 +59,6 @@ from .topology import (  # noqa: F401
     paper_example,
     random_dataflow,
     region_line,
+    region_tree,
     waxman,
 )

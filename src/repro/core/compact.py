@@ -73,6 +73,11 @@ class CompactedView:
             and np.array_equal(self.nodes, np.arange(self.base.n))
         )
         self._graph = None  # cached compacted base tensors
+        # derivation links (hierarchical planes): views nested over this
+        # view's compacted graph, and the view this one was derived from.
+        # Invalidation propagates through the chain — see invalidate().
+        self._outer: "CompactedView | None" = None
+        self._inner: list["CompactedView"] = []
 
     # -- construction --------------------------------------------------------
 
@@ -210,6 +215,46 @@ class CompactedView:
         out[np.ix_(self.nodes, self.nodes)] = mat
         return out
 
+    # -- nesting (hierarchical planes) ---------------------------------------
+
+    def derive(self, nodes: np.ndarray) -> "CompactedView":
+        """A nested view over THIS view's compacted graph: ``nodes`` are
+        ascending ids in this view's *local* space.  The child is linked
+        into the derivation chain so :meth:`invalidate` propagates (see
+        there for the direction rules)."""
+        return self.adopt(CompactedView(self.graph(), np.asarray(nodes, np.int64)))
+
+    def adopt(self, child: "CompactedView") -> "CompactedView":
+        """Link an existing view built over this view's compacted graph
+        into the derivation chain (used when a child plane constructs its
+        own views over ``outer.graph()``)."""
+        if child.base.n != self.n_local:
+            raise ValueError(
+                f"cannot adopt: child view is over an n={child.base.n} graph "
+                f"but this view compacts to n_local={self.n_local}"
+            )
+        child._outer = self
+        self._inner.append(child)
+        return child
+
+    def compose(self, inner: "CompactedView") -> "CompactedView":
+        """Flatten a bijection-of-bijection into one direct view: ``inner``
+        maps ids of this view's compacted graph; the result maps
+        ``inner``-local ids straight to THIS view's base (global) ids.
+
+        The composed view is a snapshot (its version is the sum of the two
+        generations at compose time) and is not linked into the derivation
+        chain — use it for cross-level lifts (write-through conservation),
+        not as a long-lived handle."""
+        if inner.base.n != self.n_local:
+            raise ValueError(
+                f"cannot compose: inner view is over an n={inner.base.n} "
+                f"graph but this view compacts to n_local={self.n_local}"
+            )
+        return CompactedView(
+            self.base, self.nodes[inner.nodes], version=self.version + inner.version
+        )
+
     # -- invalidation --------------------------------------------------------
 
     def invalidate(self) -> int:
@@ -217,10 +262,28 @@ class CompactedView:
         bijection generation and drop the cached compacted tensors.  Ids
         themselves are stable under liveness churn — the version exists so
         holders of (local id, version) records can tell which generation
-        minted them."""
+        minted them.
+
+        Propagation through a derivation chain: *ancestors* contain this
+        region's slice, so their generation bumps too (a leaf churn is
+        visible at every enclosing level); *descendants* slice this view's
+        tensors, so they bump when THIS view is the invalidation origin.
+        Siblings are untouched — their slice of truth did not change."""
+        self._bump_up()
+        self._bump_down()
+        return self.version
+
+    def _bump_up(self) -> None:
         self.version += 1
         self._graph = None
-        return self.version
+        if self._outer is not None:
+            self._outer._bump_up()
+
+    def _bump_down(self) -> None:
+        for child in self._inner:
+            child.version += 1
+            child._graph = None
+            child._bump_down()
 
 
 def compact_view(rg: ResourceGraph, assign: np.ndarray, r: int) -> CompactedView:

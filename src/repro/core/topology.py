@@ -147,6 +147,67 @@ def region_line(
     return ResourceGraph(cap, bw, lat), assign
 
 
+def region_tree(
+    levels: int,
+    branching: int,
+    k: int = 4,
+    *,
+    cap_range=(2.0, 10.0),
+    bw_range=(10.0, 100.0),
+    lat_intra: float = 1.0,
+    lat_level: float = 5.0,
+    gateway_bw_scale: float = 4.0,
+    seed: int = 0,
+) -> tuple[ResourceGraph, np.ndarray]:
+    """A ``branching``-ary tree of fully-meshed ``k``-node leaf regions.
+
+    ``branching ** levels`` leaf regions are numbered depth-first, so any
+    contiguous block of ``branching ** (levels - 1)`` leaves is exactly one
+    top-level subtree — the grouping the hierarchical control plane uses.
+    At every tree level ``l`` in ``1..levels`` the ``branching`` sibling
+    subtrees under a common parent are joined all-to-all by one gateway
+    link per pair (between the first leaf of each subtree, on node index
+    ``(l - 1) % k`` so distinct levels use distinct gateway nodes where
+    ``k`` allows), with latency ``lat_level * l`` — higher cuts are more
+    expensive, as in a datacenter/pod/rack hierarchy.  Gateway links get
+    ``gateway_bw_scale`` x the leaf bandwidth draw since they carry
+    aggregated traffic.
+
+    Returns ``(graph, assign)`` where ``assign`` maps node -> leaf region;
+    pass it as ``ControlPlane(region_of=assign, levels=...)``.
+    """
+    assert levels >= 1 and branching >= 1 and k >= 1
+    rng = np.random.default_rng(seed)
+    leaves = branching**levels
+    n = leaves * k
+    cap = rng.uniform(*cap_range, size=n).astype(np.float32)
+    bw = np.zeros((n, n), np.float32)
+    lat = np.full((n, n), INF, np.float32)
+    np.fill_diagonal(lat, 0.0)
+
+    def _link(u, v, l, scale=1.0):
+        b = scale * float(rng.uniform(*bw_range))
+        bw[u, v] = bw[v, u] = b
+        lat[u, v] = lat[v, u] = l
+
+    for leaf in range(leaves):
+        base = leaf * k
+        for i in range(k):
+            for j in range(i + 1, k):
+                _link(base + i, base + j, lat_intra)
+    for lvl in range(1, levels + 1):
+        sub = branching ** (lvl - 1)  # leaves per child subtree at this level
+        block = sub * branching  # leaves per parent block
+        gw = (lvl - 1) % k
+        for start in range(0, leaves, block):
+            reps = [(start + c * sub) * k + gw for c in range(branching)]
+            for i in range(branching):
+                for j in range(i + 1, branching):
+                    _link(reps[i], reps[j], lat_level * lvl, gateway_bw_scale)
+    assign = np.repeat(np.arange(leaves, dtype=np.int64), k)
+    return ResourceGraph(cap, bw, lat), assign
+
+
 def random_dataflow(
     rg: ResourceGraph,
     p: int,

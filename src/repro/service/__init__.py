@@ -18,11 +18,22 @@ front ends:
                 region chain; constructed by ``ControlPlane(rg,
                 regions=R)``, bit-identical to the centralized plane at
                 R = 1
+  hierarchy:    HierarchicalControlPlane — regions of regions: per-level
+                brokers that translate ids only at their own boundary,
+                recursive spanning decomposition, tree-structured gossip
+                (O(branching * fanout) msgs/round per level); constructed
+                by ``ControlPlane(rg, levels=L, branching=b)``,
+                bit-identical to the flat regional plane at levels = 1
 """
 from .controlplane import ControlPlane, Request, TenantState  # noqa: F401
 from .defrag import DefragResult, defrag, global_objective  # noqa: F401
 from .gossip import GossipBus, ShareRecord  # noqa: F401
+from .hierarchy import (  # noqa: F401
+    HierarchicalControlPlane,
+    resolve_nesting,
+)
 from .regions import (  # noqa: F401
+    ChainBroker,
     RegionalControlPlane,
     SpanPart,
     SpanningTicket,

@@ -81,7 +81,26 @@ class ControlPlane:
     """
 
     def __new__(cls, rg=None, *args, regions: int = 1, **kwargs):
-        regional = int(regions) > 1 or kwargs.get("region_of") is not None
+        levels = kwargs.get("levels")
+        if levels is not None and int(levels) < 1:
+            raise ValueError(f"levels={levels} must be >= 1")
+        if cls is ControlPlane and levels is not None and int(levels) > 1:
+            from .hierarchy import HierarchicalControlPlane
+
+            # nested planes: levels >= 2 builds the hierarchy regardless of
+            # how the leaf partition is given (regions=, region_of=, or
+            # branching=); contradictions fail fast in resolve_nesting.
+            return HierarchicalControlPlane(
+                rg,
+                regions=int(regions) if int(regions) > 1 else None,
+                **kwargs,
+            )
+        regional = (
+            int(regions) > 1
+            or kwargs.get("region_of") is not None
+            or levels is not None  # levels=1 asks for the flat regional plane
+            or kwargs.get("branching") is not None  # fails fast there
+        )
         if cls is ControlPlane and regional:
             from .regions import RegionalControlPlane
 
@@ -101,6 +120,8 @@ class ControlPlane:
         rg: ResourceGraph,
         *,
         regions: int = 1,
+        levels: Optional[int] = None,
+        branching: Optional[int] = None,
         policy: Optional[FairSharePolicy] = None,
         micro_batch: int = 32,
         max_attempts: int = 8,
@@ -126,6 +147,20 @@ class ControlPlane:
         batches persist across ``pump`` calls (``conservation()`` counts
         them); :meth:`flush` forces them all to commit."""
         assert int(regions) <= 1, "regions > 1 is dispatched in __new__"
+        # nesting kwargs are facade-dispatched in __new__; reaching this
+        # body with either set means a direct centralized construction
+        # that would otherwise silently ignore them
+        if levels is not None and int(levels) != 1:
+            raise ValueError(
+                f"levels={levels}: the centralized ControlPlane is "
+                "single-level; build a hierarchy with ControlPlane(rg, "
+                "levels=...) on the facade"
+            )
+        if branching is not None:
+            raise ValueError(
+                f"branching={branching} requires a hierarchical plane "
+                "(levels >= 2)"
+            )
         self.placer = OnlinePlacer(
             rg, method=method, use_kernel=use_kernel, view=view, **solve_cfg
         )
@@ -375,12 +410,18 @@ class ControlPlane:
         path does."""
         picked, pending = self._inflight.popleft()
         tickets = self.placer.commit_admit(pending)
+        # activate every successful admission BEFORE any reject handling:
+        # a rejected request's preemption may displace a sibling from this
+        # very window, and reclaim can only requeue victims it finds in
+        # the registry — activating afterwards would resurrect a ticket
+        # the placer already released (stale-registry leak)
         out: list[Ticket] = []
         for r, t in zip(picked, tickets):
             if t is not None:
                 self._activate(r, t)
                 out.append(t)
-            else:
+        for r, t in zip(picked, tickets):
+            if t is None:
                 t2 = self._handle_reject(r)
                 if t2 is not None:
                     out.append(t2)

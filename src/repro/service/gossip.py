@@ -73,6 +73,8 @@ class GossipBus:
             {} for _ in range(self.n_regions)
         ]
         self.messages_sent = 0
+        self.records_sent = 0  # ShareRecords carried across all messages
+        self.payload_sent = 0  # scalar fields carried (records x record size)
         self.rounds = 0
 
     # -- publication / dissemination ----------------------------------------
@@ -119,11 +121,42 @@ class GossipBus:
             idx = self.rng.choice(
                 len(peers), size=min(self.fanout, len(peers)), replace=False
             )
+            nrec = len(snap[r])
+            size = sum(self._record_size(rec) for rec in snap[r].values())
             for i in np.sort(idx):  # deterministic merge order
                 self._merge(self.views[peers[int(i)]], snap[r])
                 sent += 1
+                self.records_sent += nrec
+                self.payload_sent += size
         self.messages_sent += sent
         return sent
+
+    @staticmethod
+    def _record_size(rec: ShareRecord) -> int:
+        """Scalar fields one :class:`ShareRecord` carries on the wire:
+        origin + version + residual_cap plus one (tenant, value) entry per
+        committed/queued key."""
+        return 3 + len(rec.committed) + len(rec.queued)
+
+    def gossip_stats(self) -> dict:
+        """Message/payload accounting for the bus's lifetime.  A flat
+        R-region plane carries up to R records per message (every region
+        pushes its whole view); the hierarchy's win is that each level's
+        bus only ever carries ``branching`` *aggregated* records."""
+        rounds = max(self.rounds, 1)
+        msgs = max(self.messages_sent, 1)
+        return {
+            "n_regions": self.n_regions,
+            "fanout": self.fanout,
+            "rounds": self.rounds,
+            "messages_sent": self.messages_sent,
+            "records_sent": self.records_sent,
+            "payload_sent": self.payload_sent,
+            "messages_per_round": self.messages_sent / rounds,
+            "records_per_round": self.records_sent / rounds,
+            "payload_per_round": self.payload_sent / rounds,
+            "records_per_message": self.records_sent / msgs,
+        }
 
     # -- estimates -----------------------------------------------------------
 

@@ -324,7 +324,156 @@ class SpanningTicket:
         return self.splits[0]
 
 
-class RegionalControlPlane:
+class ChainBroker:
+    """Cut-edge ledger + quotient-graph chain selection, shared by every
+    plane that brokers spanning placements over child partitions: the flat
+    :class:`RegionalControlPlane` over its regions, and the
+    :class:`~repro.service.hierarchy.HierarchicalControlPlane` over its
+    child planes.
+
+    Subclasses provide ``base`` (the network in THIS plane's id space),
+    ``region_of`` (node -> child index), ``node_up`` and
+    ``max_cut_attempts`` before calling :meth:`_init_cut_ledger`.  The
+    broker's resident state is deliberately small: the cut ledger holds
+    only the *boundary* gateway ids plus the quotient graph over direct
+    children — never the full membership of any child."""
+
+    base: ResourceGraph
+    region_of: np.ndarray
+    node_up: np.ndarray
+    max_cut_attempts: int
+
+    def _init_cut_ledger(self) -> None:
+        """Build the cut-edge bandwidth ledger: cut links belong to no
+        child (they are outside every compacted submatrix), so this ledger
+        is their only accounting, reserved/released by the plane's 2PC."""
+        self.cut_base: dict[tuple[int, int], float] = {}
+        self.cut_residual: dict[tuple[int, int], float] = {}
+        self.cut_link_up: dict[tuple[int, int], bool] = {}
+        self._cut_by_pair: dict[tuple[int, int], list[tuple[int, int]]] = {}
+        for (u, v) in cut_edges(self.base, self.region_of):
+            self.cut_base[(u, v)] = float(self.base.bw[u, v])
+            self.cut_residual[(u, v)] = float(self.base.bw[u, v])
+            self.cut_link_up[(u, v)] = True
+            self._cut_by_pair.setdefault(
+                (int(self.region_of[u]), int(self.region_of[v])), []
+            ).append((u, v))
+
+    def _cut_alive(self, u: int, v: int) -> bool:
+        return (
+            self.cut_link_up.get((u, v), False)
+            and bool(self.node_up[u]) and bool(self.node_up[v])
+        )
+
+    def _quotient_adjacency(self) -> dict[int, dict[int, float]]:
+        """The quotient graph of children under the currently-alive cut
+        edges: ``adj[r1][r2]`` = min latency among alive (r1 -> r2) cuts."""
+        adj: dict[int, dict[int, float]] = {}
+        for (r1, r2), edges in self._cut_by_pair.items():
+            lats = [
+                float(self.base.lat[e]) for e in edges if self._cut_alive(*e)
+            ]
+            if lats:
+                adj.setdefault(r1, {})[r2] = min(lats)
+        return adj
+
+    def _region_chain(self, ra: int, rb: int) -> Optional[list[int]]:
+        """Fewest-hop child chain ``ra -> ... -> rb`` over the quotient
+        graph (ties by summed min cut latency, then child ids — fully
+        deterministic).  None when the quotient graph is partitioned."""
+        adj = self._quotient_adjacency()
+        best: dict[int, tuple[int, float]] = {ra: (0, 0.0)}
+        heap: list[tuple[int, float, tuple[int, ...]]] = [(0, 0.0, (ra,))]
+        while heap:
+            hops, lat, path = heapq.heappop(heap)
+            r = path[-1]
+            if r == rb:
+                return list(path)
+            if (hops, lat) > best.get(r, (hops, lat)):
+                continue  # stale heap entry
+            for nb in sorted(adj.get(r, {})):
+                if nb in path:
+                    continue
+                cand = (hops + 1, lat + adj[r][nb])
+                if nb not in best or cand < best[nb]:
+                    best[nb] = cand
+                    heapq.heappush(heap, (*cand, path + (nb,)))
+        return None
+
+    def _chain_feasible(self, df: DataflowPath, splits, gates) -> bool:
+        """Cut-bandwidth screen for one candidate.  Ghost gateway
+        endpoints (see :func:`split_dataflow_chain`) remove every
+        structural pinning constraint — whether a segment can actually
+        route from its gateway is the child solve's decision."""
+        for s, e in zip(splits, gates):
+            if self.cut_residual[e] + _EPS < float(df.breq[s]):
+                return False
+        return True
+
+    def _candidate_chains(self, df: DataflowPath, chain: list[int]) -> list:
+        """Up to ``max_cut_attempts`` (splits, cut-edges) candidates for a
+        child chain: split combinations (non-decreasing — repeats make
+        transit regions) ordered by compute balance across the segments,
+        cut edges per hop by link latency (hop order lexicographic)."""
+        m = len(chain) - 1
+        p = df.p
+        edge_lists = []
+        for (r1, r2) in zip(chain[:-1], chain[1:]):
+            edges = [
+                e for e in self._cut_by_pair.get((r1, r2), ())
+                if self._cut_alive(*e)
+            ]
+            if not edges:
+                return []
+            edges.sort(key=lambda e: float(self.base.lat[e]))
+            edge_lists.append(edges)
+        prefix = np.concatenate([[0.0], np.cumsum(df.creq.astype(np.float64))])
+        target = float(prefix[-1]) / (m + 1)
+
+        def balance(splits):
+            bounds = (-1,) + splits + (p - 1,)
+            return sum(
+                abs(float(prefix[bounds[i + 1] + 1] - prefix[bounds[i] + 1])
+                    - target)
+                for i in range(m + 1)
+            )
+
+        # bounded search: the exact combination space C(p+m-2, m) is only
+        # enumerated while it is small; long dataflows over long chains
+        # restrict each cut's candidate positions to a window around its
+        # balanced quantile (where balance() is minimized anyway), and a
+        # hard islice cap bounds the scoring work outright.  nsmallest
+        # then keeps a pool sized so even an adversarial run of
+        # infeasible splits cannot starve the max_cut_attempts quota.
+        positions = range(p - 1)
+        if math.comb(p - 1 + m - 1, m) > 20_000:
+            target_pos = {
+                min(max(int(np.searchsorted(
+                    prefix, float(prefix[-1]) * i / (m + 1))) + d, 0), p - 2)
+                for i in range(1, m + 1)
+                for d in range(-4, 5)
+            }
+            positions = sorted(target_pos)
+        pool = max(32, 8 * self.max_cut_attempts)
+        combos = heapq.nsmallest(
+            pool,
+            itertools.islice(
+                itertools.combinations_with_replacement(positions, m),
+                50_000),
+            key=lambda s: (balance(s), s),
+        )
+        out = []
+        for splits in combos:
+            for gates in itertools.product(*edge_lists):
+                if not self._chain_feasible(df, splits, gates):
+                    continue
+                out.append((splits, gates))
+                if len(out) >= self.max_cut_attempts:
+                    return out
+        return out
+
+
+class RegionalControlPlane(ChainBroker):
     """R sharded control planes + gossip + a multi-hop cut-edge 2PC broker.
 
     Mirrors the centralized :class:`ControlPlane` surface (register_tenant
@@ -346,6 +495,8 @@ class RegionalControlPlane:
         *,
         regions: Optional[int] = None,
         region_of=None,
+        levels: Optional[int] = None,
+        branching: Optional[int] = None,
         policy: Optional[FairSharePolicy] = None,
         micro_batch: int = 32,
         max_attempts: int = 8,
@@ -361,6 +512,20 @@ class RegionalControlPlane:
         **solve_cfg,
     ):
         self.base = rg
+        # nesting kwargs fail fast: this class IS the levels=1 plane — a
+        # levels > 1 request must go through ControlPlane(levels=...) /
+        # HierarchicalControlPlane, never silently build flat
+        if levels is not None and int(levels) != 1:
+            raise ValueError(
+                f"levels={levels}: RegionalControlPlane is the flat "
+                "(levels=1) plane; build a hierarchy with "
+                "ControlPlane(rg, levels=...) or HierarchicalControlPlane"
+            )
+        if branching is not None:
+            raise ValueError(
+                f"branching={branching} requires a hierarchical plane "
+                "(levels >= 2); the flat plane takes regions= or region_of="
+            )
         if region_of is not None:
             # caller-pinned partition (e.g. a line-of-regions topology
             # whose canonical assignment the BFS grower would not find);
@@ -425,20 +590,9 @@ class RegionalControlPlane:
         self.gossip_period = max(1, int(gossip_period))
         self.node_up = np.ones(rg.n, bool)
 
-        # cut-edge bandwidth ledger: owned by the broker, reserved by 2PC.
-        # Cut links belong to no region (they are outside every compacted
-        # submatrix), so this ledger is their only accounting.
-        self.cut_base: dict[tuple[int, int], float] = {}
-        self.cut_residual: dict[tuple[int, int], float] = {}
-        self.cut_link_up: dict[tuple[int, int], bool] = {}
-        self._cut_by_pair: dict[tuple[int, int], list[tuple[int, int]]] = {}
-        for (u, v) in cut_edges(rg, self.region_of):
-            self.cut_base[(u, v)] = float(rg.bw[u, v])
-            self.cut_residual[(u, v)] = float(rg.bw[u, v])
-            self.cut_link_up[(u, v)] = True
-            self._cut_by_pair.setdefault(
-                (int(self.region_of[u]), int(self.region_of[v])), []
-            ).append((u, v))
+        # cut-edge bandwidth ledger: owned by the broker, reserved by 2PC
+        # (see ChainBroker._init_cut_ledger)
+        self._init_cut_ledger()
 
         # spanning-request bookkeeping (the broker's ledger)
         self.span_tenants: dict[str, TenantState] = {}
@@ -457,6 +611,13 @@ class RegionalControlPlane:
         # placements torn down by in-region rescue preemptions collect here
         # so the churn return contract covers them too
         self._churn_collector: Optional[list] = None
+        # reservations held by a PARENT plane's 2PC (broker_admit): their
+        # lifecycle belongs to the parent — a displacement fires
+        # on_broker_displace(rid) instead of requeueing locally, and they
+        # are not caller-visible active requests
+        self._broker_held: set[int] = set()
+        self.on_broker_displace = None  # parent hook: rid -> None
+        self.on_drop = None  # parent hook: plane-level rid -> None
         self.span_stats = {
             "attempts": 0, "admitted": 0, "dropped": 0,
             "displaced": 0, "no_cut": 0,
@@ -522,6 +683,14 @@ class RegionalControlPlane:
                 held[t] += c
         return held
 
+    def residual_capacity(self) -> float:
+        """Summed live residual node capacity across every region (the
+        scalar a parent plane publishes as this child's aggregate)."""
+        return float(sum(
+            np.sum(np.where(cp.placer.node_up, cp.placer.cap, 0.0))
+            for cp in self.regions
+        ))
+
     def queued_demand(self) -> dict[str, float]:
         out = {t: 0.0 for t in self.span_tenants}
         for cp in self.regions:
@@ -543,14 +712,26 @@ class RegionalControlPlane:
         return None
 
     def active_ids(self) -> list[int]:
-        """Global rids of active requests across every region + spanning."""
+        """Global rids of active requests across every region + spanning.
+        Parent-held broker reservations are excluded — they are segments
+        of a composite the parent plane accounts for."""
         out = [
             self._grid_of[(r, lrid)]
             for r, cp in enumerate(self.regions)
             for lrid in cp.active
         ]
-        out += list(self._span_active)
+        out += [rid for rid in self._span_active if rid not in self._broker_held]
         return sorted(out)
+
+    def ticket_live(self, t) -> bool:
+        """Is a handle returned by :meth:`pump` still standing?  (A later
+        round — or an enclosing plane's 2PC — may have displaced it.)"""
+        if self._span_active.get(getattr(t, "rid", -1)) is t:
+            return True
+        return any(
+            cp.placer.tickets.get(getattr(t, "tid", -1)) is t
+            for cp in self.regions
+        )
 
     def conservation(self) -> dict[str, int]:
         """The global ticket ledger: regional ledgers + the broker's
@@ -591,13 +772,19 @@ class RegionalControlPlane:
 
     # -- admission -----------------------------------------------------------
 
-    def pump(self, *, rounds: int = 1) -> list:
+    def pump(self, *, rounds: int = 1, extra_committed=None) -> list:
         """One decentralized drain round per ``rounds``: publish + gossip
         share estimates, drain every region's queues under
         estimated-global fair shares, then place queued spanning requests
         by bounded 2PC.  Returns the still-live admitted handles
         (:class:`Ticket` for in-region, :class:`SpanningTicket` for
-        cross-region)."""
+        cross-region).
+
+        ``extra_committed`` is a parent plane's downward-published
+        estimate of per-tenant holdings *outside this plane entirely*
+        (the tree-gossip downlink); it folds into every region's drain
+        the same way gossiped sibling estimates do — advisory for drain
+        order, never capacity."""
         admitted: list[Ticket] = []
         spanned: list[SpanningTicket] = []
         for _ in range(int(rounds)):
@@ -607,25 +794,23 @@ class RegionalControlPlane:
             if self.R > 1 and self._pumps % self.gossip_period == 0:
                 self.bus.tick()
             for r, cp in enumerate(self.regions):
-                extra = None
+                extra: dict[str, float] = dict(extra_committed or {})
                 if self.R > 1:
                     # gossiped estimate of remote holdings, plus the
                     # broker-reserved spanning segments physically held in
                     # THIS region (they are placer tickets but not local
                     # control-plane requests, so the local accounting
                     # cannot see them)
-                    extra = self.bus.remote_committed(r)
+                    for t, c in self.bus.remote_committed(r).items():
+                        extra[t] = extra.get(t, 0.0) + c
                     local_cp = cp.committed_capacity()
                     for t, c in self._region_committed(r).items():
                         diff = c - local_cp.get(t, 0.0)
                         if diff > _EPS:
                             extra[t] = extra.get(t, 0.0) + diff
                 admitted += cp.pump(rounds=1, extra_committed=extra or None)
-            spanned += self._pump_spanning()
-        live = [
-            t for t in admitted
-            if any(cp.placer.tickets.get(t.tid) is t for cp in self.regions)
-        ]
+            spanned += self._pump_spanning(extra_committed)
+        live = [t for t in admitted if self.ticket_live(t)]
         live += [s for s in spanned if s.rid in self._span_active]
         return live
 
@@ -651,7 +836,7 @@ class RegionalControlPlane:
             default=0,
         )
 
-    def _pump_spanning(self) -> list[SpanningTicket]:
+    def _pump_spanning(self, extra_committed=None) -> list[SpanningTicket]:
         if self.R <= 1:
             return []
         out: list[SpanningTicket] = []
@@ -662,6 +847,9 @@ class RegionalControlPlane:
                 continue
             committed = self._region_committed(r)
             for t, c in self.bus.remote_committed(r).items():
+                if t in committed:
+                    committed[t] += c
+            for t, c in (extra_committed or {}).items():
                 if t in committed:
                     committed[t] += c
             picked = self.policy.select(
@@ -687,124 +875,78 @@ class RegionalControlPlane:
                     if req.attempts >= self.max_attempts:
                         self.span_tenants[req.tenant].dropped += 1
                         self.span_stats["dropped"] += 1
+                        if self.on_drop is not None:
+                            self.on_drop(req.rid)
                     else:
                         ControlPlane._enqueue(q, req, front_of_class=True)
         return out
 
-    # -- region quotient graph / chain selection -----------------------------
+    # -- parent-plane broker interface (hierarchical nesting) ----------------
 
-    def _cut_alive(self, u: int, v: int) -> bool:
-        return (
-            self.cut_link_up.get((u, v), False)
-            and bool(self.node_up[u]) and bool(self.node_up[v])
-        )
+    def broker_admit(self, tenant: str, df: DataflowPath, *,
+                     klass: int = 0) -> Optional[int]:
+        """Synchronous, abortable admission used by a PARENT plane's 2PC:
+        place ``df`` (in THIS plane's id space) immediately — in one
+        region, or spanning this plane's own regions (the recursion that
+        lets a top-level segment split again at the child's cuts).
 
-    def _quotient_adjacency(self) -> dict[int, dict[int, float]]:
-        """The quotient graph of regions under the currently-alive cut
-        edges: ``adj[r1][r2]`` = min latency among alive (r1 -> r2) cuts."""
-        adj: dict[int, dict[int, float]] = {}
-        for (r1, r2), edges in self._cut_by_pair.items():
-            lats = [
-                float(self.base.lat[e]) for e in edges if self._cut_alive(*e)
-            ]
-            if lats:
-                adj.setdefault(r1, {})[r2] = min(lats)
-        return adj
-
-    def _region_chain(self, ra: int, rb: int) -> Optional[list[int]]:
-        """Fewest-hop region chain ``ra -> ... -> rb`` over the quotient
-        graph (ties by summed min cut latency, then region ids — fully
-        deterministic).  None when the quotient graph is partitioned."""
-        adj = self._quotient_adjacency()
-        best: dict[int, tuple[int, float]] = {ra: (0, 0.0)}
-        heap: list[tuple[int, float, tuple[int, ...]]] = [(0, 0.0, (ra,))]
-        while heap:
-            hops, lat, path = heapq.heappop(heap)
-            r = path[-1]
-            if r == rb:
-                return list(path)
-            if (hops, lat) > best.get(r, (hops, lat)):
-                continue  # stale heap entry
-            for nb in sorted(adj.get(r, {})):
-                if nb in path:
-                    continue
-                cand = (hops + 1, lat + adj[r][nb])
-                if nb not in best or cand < best[nb]:
-                    best[nb] = cand
-                    heapq.heappush(heap, (*cand, path + (nb,)))
-        return None
-
-    def _chain_feasible(self, df: DataflowPath, splits, gates) -> bool:
-        """Cut-bandwidth screen for one candidate.  Ghost gateway
-        endpoints (see :func:`split_dataflow_chain`) remove every
-        structural pinning constraint — whether a segment can actually
-        route from its gateway is the regional solve's decision."""
-        for s, e in zip(splits, gates):
-            if self.cut_residual[e] + _EPS < float(df.breq[s]):
-                return False
-        return True
-
-    def _candidate_chains(self, df: DataflowPath, chain: list[int]) -> list:
-        """Up to ``max_cut_attempts`` (splits, cut-edges) candidates for a
-        region chain: split combinations (non-decreasing — repeats make
-        transit regions) ordered by compute balance across the segments,
-        cut edges per hop by link latency (hop order lexicographic)."""
-        m = len(chain) - 1
-        p = df.p
-        edge_lists = []
-        for (r1, r2) in zip(chain[:-1], chain[1:]):
-            edges = [
-                e for e in self._cut_by_pair.get((r1, r2), ())
-                if self._cut_alive(*e)
-            ]
-            if not edges:
-                return []
-            edges.sort(key=lambda e: float(self.base.lat[e]))
-            edge_lists.append(edges)
-        prefix = np.concatenate([[0.0], np.cumsum(df.creq.astype(np.float64))])
-        target = float(prefix[-1]) / (m + 1)
-
-        def balance(splits):
-            bounds = (-1,) + splits + (p - 1,)
-            return sum(
-                abs(float(prefix[bounds[i + 1] + 1] - prefix[bounds[i] + 1])
-                    - target)
-                for i in range(m + 1)
+        Returns a rid releasable with :meth:`broker_release`, or None
+        (nothing reserved).  The reservation is a first-class spanning
+        entry in this plane's ledger, so conservation and invariants hold
+        at every level; if churn or preemption inside this plane later
+        displaces it, ``on_broker_displace(rid)`` fires instead of a local
+        requeue — the composite belongs to the parent."""
+        st = self.span_tenants[tenant]  # KeyError for unregistered
+        rid = next(self._rid)
+        req = Request(rid, tenant, df, klass=klass)
+        ra = int(self.region_of[df.src])
+        rb = int(self.region_of[df.dst])
+        if ra == rb:
+            t = self._reserve_plain(ra, df, tenant, klass)
+            if t is None:
+                return None
+            span = SpanningTicket(
+                rid=rid, req=req,
+                parts=[SpanPart(ra, t.tid, t.df, self.views[ra].version)],
+                cuts=[], cut_bws=[], splits=[],
             )
+            self._span_active[rid] = span
+            self._part_of[(ra, t.tid)] = rid
+        else:
+            self.span_stats["attempts"] += 1
+            span = self._try_place_spanning(req)
+            if span is None:
+                return None
+            self.span_stats["admitted"] += 1
+        st.submitted += 1
+        st.admitted += 1
+        self._broker_held.add(rid)
+        return rid
 
-        # bounded search: the exact combination space C(p+m-2, m) is only
-        # enumerated while it is small; long dataflows over long chains
-        # restrict each cut's candidate positions to a window around its
-        # balanced quantile (where balance() is minimized anyway), and a
-        # hard islice cap bounds the scoring work outright.  nsmallest
-        # then keeps a pool sized so even an adversarial run of
-        # infeasible splits cannot starve the max_cut_attempts quota.
-        positions = range(p - 1)
-        if math.comb(p - 1 + m - 1, m) > 20_000:
-            target_pos = {
-                min(max(int(np.searchsorted(
-                    prefix, float(prefix[-1]) * i / (m + 1))) + d, 0), p - 2)
-                for i in range(1, m + 1)
-                for d in range(-4, 5)
-            }
-            positions = sorted(target_pos)
-        pool = max(32, 8 * self.max_cut_attempts)
-        combos = heapq.nsmallest(
-            pool,
-            itertools.islice(
-                itertools.combinations_with_replacement(positions, m),
-                50_000),
-            key=lambda s: (balance(s), s),
+    def broker_release(self, rid: int) -> None:
+        """Release (or phase-1 abort) a :meth:`broker_admit` reservation.
+        Idempotent: releasing a reservation this plane already displaced
+        (and reported via ``on_broker_displace``) is a no-op."""
+        if rid not in self._broker_held:
+            return
+        self._broker_held.discard(rid)
+        st = self._span_active.pop(rid)
+        self._teardown_span(st)
+        self.span_tenants[st.tenant].released += 1
+
+    def broker_uses_node(self, rid: int, v: int) -> bool:
+        """Does a broker reservation touch node ``v`` (this plane's id
+        space)?  Used by the parent to scope churn displacement."""
+        st = self._span_active.get(rid)
+        return st is not None and self._span_uses_node(st, int(v))
+
+    def broker_uses_link(self, rid: int, u: int, v: int) -> bool:
+        st = self._span_active.get(rid)
+        if st is None:
+            return False
+        return self._span_uses_link(st, int(u), int(v)) or any(
+            c in ((int(u), int(v)), (int(v), int(u))) for c in st.cuts
         )
-        out = []
-        for splits in combos:
-            for gates in itertools.product(*edge_lists):
-                if not self._chain_feasible(df, splits, gates):
-                    continue
-                out.append((splits, gates))
-                if len(out) >= self.max_cut_attempts:
-                    return out
-        return out
 
     # -- two-phase commit over the chain -------------------------------------
 
@@ -959,10 +1101,14 @@ class RegionalControlPlane:
 
     def _forget_local(self, r: int, lrid: int) -> None:
         """A region terminated (dropped) a local request: the global-rid
-        maps must not grow without bound over the plane's lifetime."""
+        maps must not grow without bound over the plane's lifetime.  The
+        plane-level ``on_drop`` hook chains the same cleanup upward when
+        this plane is itself a child of a hierarchy."""
         rid = self._grid_of.pop((r, lrid), None)
         if rid is not None:
             self._local.pop(rid, None)
+            if self.on_drop is not None:
+                self.on_drop(rid)
 
     def _teardown_span(self, st: SpanningTicket,
                        skip: Optional[tuple[int, int]] = None) -> list[Ticket]:
@@ -1003,17 +1149,30 @@ class RegionalControlPlane:
         old_parts = [part] + self._teardown_span(st, skip=(r, part.tid))
         self.span_stats["displaced"] += 1
         self.span_tenants[st.tenant].preempted += 1
-        st.req.attempts = 0
-        home = int(self.region_of[st.df.src])
-        ControlPlane._enqueue(
-            self._span_q[home][st.tenant], st.req, front_of_class=True
-        )
+        if rid in self._broker_held:
+            # a parent plane's reservation: its lifecycle here ends — the
+            # parent tears down the composite and requeues at its level
+            self._broker_held.discard(rid)
+            self.span_tenants[st.tenant].released += 1
+            if self.on_broker_displace is not None:
+                self.on_broker_displace(rid)
+        else:
+            st.req.attempts = 0
+            home = int(self.region_of[st.df.src])
+            ControlPlane._enqueue(
+                self._span_q[home][st.tenant], st.req, front_of_class=True
+            )
         if self._churn_collector is not None:
             self._churn_collector.extend(old_parts)
 
     # -- release / churn ------------------------------------------------------
 
     def release(self, rid: int) -> None:
+        if rid in self._broker_held:
+            raise KeyError(
+                f"rid {rid} is a parent-held broker reservation; it is "
+                "released through broker_release by the plane that holds it"
+            )
         st = self._span_active.pop(rid, None)
         if st is not None:
             # guarded teardown (tolerates a sibling whose region already
@@ -1043,6 +1202,12 @@ class RegionalControlPlane:
             old += self._teardown_span(st)
             self.span_stats["displaced"] += 1
             self.span_tenants[st.tenant].preempted += 1
+            if rid in self._broker_held:
+                self._broker_held.discard(rid)
+                self.span_tenants[st.tenant].released += 1
+                if self.on_broker_displace is not None:
+                    self.on_broker_displace(rid)
+                continue
             st.req.attempts = 0
             displaced.append(st)
         # back-to-front so the batch keeps FIFO-within-class order in any
@@ -1225,6 +1390,34 @@ class RegionalControlPlane:
             "balanced_n_r": math.ceil(self.base.n / max(self.R, 1)),
         }
 
+    def resident_state_report(self) -> dict:
+        """Max per-component resident state — the scaling metric the
+        hierarchical plane is graded on.  Each region holds its
+        ``n_r``-sized solve/residual state plus one gossip record per peer
+        (R at steady state); the broker holds the quotient graph (R) plus
+        its boundary id table — the distinct gateway node ids in the cut
+        ledger.  A flat plane's broker is therefore O(boundary + R); the
+        hierarchy keeps every level's boundary and peer count at
+        O(branching)."""
+        gateway_ids = {v for e in self.cut_base for v in e}
+        comps = [{
+            "component": "broker",
+            "id_table": len(gateway_ids),
+            "peers": self.R,
+            "state": len(gateway_ids) + self.R,
+        }]
+        for r in range(self.R):
+            comps.append({
+                "component": f"region[{r}]",
+                "solve_n": self.views[r].n_local,
+                "peers": self.R,
+                "state": self.views[r].n_local + self.R,
+            })
+        return {
+            "components": comps,
+            "max_component_state": max(c["state"] for c in comps),
+        }
+
     def coordination_report(self) -> dict:
         """The decentralization story in numbers: gossip volume/staleness
         and 2PC traffic next to the spanning admission outcomes and the
@@ -1239,10 +1432,12 @@ class RegionalControlPlane:
                 self.bus.messages_sent / max(self.bus.rounds, 1)
             ),
             "max_staleness": self.bus.max_staleness(),
+            "gossip": self.bus.gossip_stats(),
             "twopc_messages": self._twopc_msgs,
             "spanning": dict(self.span_stats),
             "cut_edges": len(self.cut_base),
             "solve_size": self.solve_size_report(),
+            "resident": self.resident_state_report(),
         }
 
     def fairness_report(self) -> dict:

@@ -315,3 +315,141 @@ def test_span_parts_record_bijection_version():
     assert part.version < cp.views[part.region].version
     assert rid in cp.active_ids()  # untouched placement survived
     cp.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# nested views (hierarchical planes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_nested_bijection_round_trip_fuzz(seed):
+    """A CompactedView of a CompactedView composes to the direct bijection:
+    inner-local -> outer-local -> global round-trips exactly, and
+    ``compose`` flattens the chain into the single equivalent view."""
+    rng = np.random.default_rng(seed)
+    rg = waxman(16 + 2 * seed, seed=seed)
+    groups = partition_regions(rg, 2, seed=seed)
+    outer = compact_view(rg, groups, int(rng.integers(0, 2)))
+    # partition the outer view's compacted graph again (ids in [0, n_g))
+    inner_assign = partition_regions(outer.graph(), 2, seed=seed + 1)
+    for q in range(2):
+        inner = outer.derive(np.nonzero(inner_assign == q)[0])
+        assert inner._outer is outer and inner in outer._inner
+        loc = np.arange(inner.n_local)
+        # inner-local -> inner-base(=outer-local) -> global, vs composed
+        direct = outer.compose(inner)
+        np.testing.assert_array_equal(
+            direct.nodes, outer.to_global(inner.to_global(loc)))
+        np.testing.assert_array_equal(
+            direct.to_global(loc), outer.to_global(inner.to_global(loc)))
+        # round trip back down through both levels
+        np.testing.assert_array_equal(
+            inner.to_local(outer.to_local(direct.to_global(loc))), loc)
+        # the composed compacted tensors equal slicing global directly
+        g1 = direct.graph()
+        g2 = inner.compact_graph(outer.graph())
+        np.testing.assert_array_equal(g1.cap, g2.cap)
+        np.testing.assert_array_equal(g1.bw, g2.bw)
+        np.testing.assert_array_equal(g1.lat, g2.lat)
+    # shape mismatches fail fast instead of mistranslating
+    with pytest.raises(ValueError, match="cannot adopt"):
+        outer.adopt(CompactedView.identity(rg))
+    with pytest.raises(ValueError, match="cannot compose"):
+        outer.compose(CompactedView.identity(rg))
+
+
+def test_two_level_write_through_conservation():
+    """Leaf placers nested two views deep (global -> group -> leaf) must
+    re-assemble the global base exactly when lifted through the COMPOSED
+    bijections — conservation survives nesting."""
+    rg = waxman(18, seed=3)
+    groups = partition_regions(rg, 2, seed=3)
+    outers = [compact_view(rg, groups, g) for g in range(2)]
+    leaves = []  # (composed view, leaf view, placer)
+    for outer in outers:
+        inner_assign = partition_regions(outer.graph(), 2, seed=5)
+        for q in range(2):
+            leaf = outer.derive(np.nonzero(inner_assign == q)[0])
+            pl = OnlinePlacer(outer.graph(), view=leaf, **PYM)
+            assert pl.base.n == leaf.n_local
+            leaves.append((outer.compose(leaf), leaf, pl))
+    rng = np.random.default_rng(7)
+    for step in range(30):
+        cv, leaf, pl = leaves[int(rng.integers(0, len(leaves)))]
+        if rng.random() < 0.7 or not pl.tickets:
+            if cv.n_local < 2:
+                continue
+            s, d = rng.choice(cv.n_local, size=2, replace=False)
+            p = int(rng.integers(2, 4))
+            pl.admit(DataflowPath(
+                rng.uniform(0.02, 0.2, p).astype(np.float32),
+                rng.uniform(0.5, 2.0, p - 1).astype(np.float32),
+                int(s), int(d)))
+        else:
+            pl.release(next(iter(pl.tickets)))
+        cap = np.zeros(rg.n)
+        bw = np.zeros((rg.n, rg.n))
+        in_region = np.zeros((rg.n, rg.n), bool)
+        for cv2, _, pl2 in leaves:
+            cap += cv2.uncompact_node_vec(pl2.cap)
+            bw += cv2.uncompact_link_mat(pl2.bw)
+            in_region |= cv2.uncompact_link_mat(
+                np.ones((cv2.n_local, cv2.n_local), bool))
+            for t in pl2.tickets.values():
+                for gv, c in cv2.uncompact_node_load(t.node_load).items():
+                    cap[gv] += c
+                for (gu, gv), b in cv2.uncompact_edge_load(
+                        t.edge_load).items():
+                    bw[gu, gv] += b
+        np.testing.assert_allclose(cap, rg.cap, atol=1e-4)
+        np.testing.assert_allclose(bw[in_region], rg.bw[in_region], atol=1e-4)
+    assert any(pl.stats.admitted for _, _, pl in leaves)
+
+
+def test_invalidate_propagates_through_derivation_chain():
+    """A leaf churn is visible at every enclosing level (ancestors bump);
+    an outer invalidation cascades to every descendant; siblings are
+    untouched — their slice of truth did not change."""
+    rg = waxman(16, seed=6)
+    groups = partition_regions(rg, 2, seed=6)
+    outer0 = compact_view(rg, groups, 0)
+    outer1 = compact_view(rg, groups, 1)
+    a0 = partition_regions(outer0.graph(), 2, seed=0)
+    leaf00 = outer0.derive(np.nonzero(a0 == 0)[0])
+    leaf01 = outer0.derive(np.nonzero(a0 == 1)[0])
+    a1 = partition_regions(outer1.graph(), 2, seed=0)
+    leaf10 = outer1.derive(np.nonzero(a1 == 0)[0])
+
+    # leaf churn: ancestors bump, siblings (and the other subtree) do not
+    leaf00.invalidate()
+    assert leaf00.version == 1 and outer0.version == 1
+    assert leaf01.version == 0  # sibling untouched
+    assert outer1.version == 0 and leaf10.version == 0  # other subtree
+    # cached tensors of the invalidated chain were dropped and rebuild
+    assert outer0.graph().n == outer0.n_local
+
+    # outer churn: every descendant bumps, the other subtree does not
+    outer0.invalidate()
+    assert outer0.version == 2
+    assert leaf00.version == 2 and leaf01.version == 1
+    assert outer1.version == 0 and leaf10.version == 0
+
+    # the regional plane drives this end to end: churn in one leaf region
+    # of a hierarchy bumps the enclosing group view automatically
+    from repro.core import region_tree
+    from repro.service import HierarchicalControlPlane
+
+    trg, assign = region_tree(2, 2, 3, seed=1)
+    cp = HierarchicalControlPlane(
+        trg, levels=2, region_of=assign, seed=0, **PYM)
+    cp.register_tenant("a")
+    g = int(cp.group_of[0])
+    top0 = cp.views[g].version
+    leaf0 = cp.children[g].views[0].version
+    other = [v.version for v in cp.views if v is not cp.views[g]]
+    cp.fail_node(0)
+    assert cp.children[g].views[0].version == leaf0 + 1
+    assert cp.views[g].version == top0 + 1  # propagated up
+    assert [v.version for v in cp.views if v is not cp.views[g]] == other
+    cp.check_invariants()

@@ -178,6 +178,39 @@ def test_equal_class_never_preempts():
     assert cp.committed_capacity()["lo"] == pytest.approx(4.0)
 
 
+def test_preemption_reclaims_same_window_victim():
+    """A rejected request's preemption may displace a sibling admitted in
+    the SAME committed micro-batch window.  The sibling must be found in
+    the registry and requeued — not leaked as a foreign ticket and then
+    'activated' after the placer already released it (the stale-registry
+    regression: activation must precede reject handling)."""
+    cp = ControlPlane(_line_rg(mid_cap=4.0), micro_batch=8, **PYM)
+    cp.register_tenant("lo")
+    cp.register_tenant("hi")
+    cp.submit("lo", _unit_df(creq=2.0), klass=CLASS_BEST_EFFORT)
+    cp.pump()
+    assert cp.committed_capacity()["lo"] == pytest.approx(2.0)
+
+    # one batch: hi (critical, needs 3 > residual 2 -> rejected by the
+    # plain commit) drains ahead of lo (fits residual exactly); hi's
+    # preemption then needs BOTH best-effort tickets — the standing one
+    # and the same-window sibling
+    cp.submit("hi", DataflowPath.make([0.0, 3.0, 0.0], [1.0, 1.0], 0, 2),
+              klass=CLASS_CRITICAL)
+    cp.submit("lo", _unit_df(creq=2.0), klass=CLASS_BEST_EFFORT)
+    admitted = cp.pump()
+    cp.check_invariants()
+    assert [t.klass for t in admitted] == [CLASS_CRITICAL]
+    assert cp.tenants["lo"].preempted == 2
+    # registry and placer agree ticket-for-ticket (object identity)
+    for _, tkt in cp.active.values():
+        assert cp.placer.tickets.get(tkt.tid) is tkt
+    assert cp.committed_capacity() == pytest.approx({"lo": 0.0, "hi": 3.0})
+    # both displaced requests re-entered the queue, nothing leaked
+    ledger = cp.conservation()
+    assert ledger["ok"] and ledger["queued"] == 2 and ledger["dropped"] == 0
+
+
 def test_preemption_rolls_back_when_it_cannot_help():
     """A request too big for the *base* network must not destroy standing
     capacity on a failed probe: conservative preemption restores
