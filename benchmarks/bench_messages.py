@@ -230,6 +230,7 @@ def run_multi_hop(
         "spanning": dict(cp.span_stats),
         "twopc_messages": cp.engine_stats().twopc_messages,
         "solve_size": _solve_size(cp),
+        "gossip_window": cp.bus.snapshot(reset=True),
     }
 
 
@@ -300,6 +301,13 @@ def run_regional(
             "gossip_messages_per_round": (
                 cp.bus.messages_sent / max(cp.bus.rounds, 1)
             ),
+            # windowed counters: this point's gossip volume only, however
+            # the plane is driven afterwards (closes the window, never
+            # rewinds the lifetime counters the gates above read)
+            "gossip_window": cp.bus.snapshot(reset=True),
+            # unified telemetry snapshot (per-region registries merged
+            # under plane=r{r} labels + broker gossip/2PC/span counters)
+            "telemetry": cp.metrics_registry().snapshot(),
         })
         points.append(rec)
 

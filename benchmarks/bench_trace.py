@@ -26,7 +26,14 @@ import time
 
 import numpy as np
 
-from repro.core import DataflowPath, region_tree
+from repro.core import DataflowPath, region_line, region_tree
+from repro.obs import (
+    Tracer,
+    reconstruct_request,
+    text_timeline,
+    validate_chrome_trace,
+    write_chrome_trace,
+)
 from repro.service import ControlPlane
 
 TENANTS = ("svc-a", "svc-b", "batch", "edge")
@@ -268,6 +275,79 @@ def run_json(smoke: bool = False, out_path: str = "BENCH_trace.json") -> dict:
     return report
 
 
+def run_trace_export(out_path: str = "BENCH_trace_events.json",
+                     *, seed: int = 9) -> dict:
+    """Export a Perfetto/Chrome-trace JSON of one spanning request's full
+    lifecycle over a line-of-regions plane: submit -> chained 2PC reserves
+    across >= 2 regions -> commit -> release, plus the gossip rounds and
+    per-region solve spans around it.  The exported file loads in
+    ui.perfetto.dev / chrome://tracing; the acceptance check here is that
+    the flow events reconstruct the lifecycle in order."""
+    rng = np.random.default_rng(seed)
+    R, k = 3, 4
+    rg, assign = region_line(R, k, seed=seed)
+    tracer = Tracer()
+    cp = ControlPlane(
+        rg, region_of=assign, method="leastcost_python", seed=seed,
+        micro_batch=8, fanout=2, tracer=tracer,
+    )
+    cp.register_tenant("svc-a", weight=1.0)
+
+    def mkdf(r1, r2, p):
+        src = int(rng.choice(np.nonzero(assign == r1)[0]))
+        dst = int(rng.choice(np.nonzero(assign == r2)[0]))
+        creq = rng.uniform(0.02, 0.15, p).astype(np.float32)
+        creq[0] = creq[-1] = 0.0
+        breq = rng.uniform(0.5, 2.0, p - 1).astype(np.float32)
+        return DataflowPath(creq, breq, src, dst)
+
+    # background in-region traffic so the trace shows regional solve spans
+    bg = [cp.submit("svc-a", mkdf(r, r, 3), klass=0) for r in range(R)]
+    # THE spanning request: endpoints 2 regions apart -> chain r0-r1-r2
+    rid = cp.submit("svc-a", mkdf(0, R - 1, 5), klass=1)
+    for _ in range(6):
+        cp.pump(rounds=1)
+        if rid in cp.active_ids():
+            break
+    admitted = rid in cp.active_ids()
+    if admitted:
+        cp.release(rid)
+    for b in bg:
+        if b in cp.active_ids():
+            cp.release(b)
+    cp.check_invariants()
+
+    doc = write_chrome_trace(tracer, out_path)
+    errors = validate_chrome_trace(doc)
+    life = reconstruct_request(doc, rid)
+    names = [e["name"] for e in life]
+    reserves = {e["args"]["region"] for e in life
+                if e["name"] == "2pc.reserve" and "args" in e}
+    lifecycle_ok = (
+        admitted
+        and names[:1] == ["submit"]
+        and len(reserves) >= 2
+        and "2pc.commit" in names
+        and names[-1] == "release"
+    )
+    report = {
+        "bench": "trace_export",
+        "out": out_path,
+        "events": len(doc["traceEvents"]),
+        "spanning_rid": rid,
+        "lifecycle": names,
+        "regions_reserved": sorted(reserves),
+        "criterion": {
+            "schema_valid": not errors,
+            "spanning_lifecycle_reconstructable": lifecycle_ok,
+        },
+        "schema_errors": errors[:8],
+        "timeline": text_timeline(tracer, max_rows=12),
+    }
+    report["ok"] = all(report["criterion"].values())
+    return report
+
+
 def run(smoke: bool = True):
     """benchmarks.run harness hook: one CSV row per plane per scenario."""
     rep = run_json(smoke=smoke, out_path="BENCH_trace.json")
@@ -294,7 +374,20 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="n=1024 only; CI slow-lane budget")
     ap.add_argument("--out", default="BENCH_trace.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Perfetto/Chrome-trace JSON of one "
+                         "spanning request's lifecycle and exit (skips "
+                         "the replay benchmark)")
     args = ap.parse_args()
+    if args.trace_out is not None:
+        rep = run_trace_export(args.trace_out)
+        print(rep["timeline"])
+        print(f"lifecycle: {' -> '.join(rep['lifecycle'])}")
+        print(f"regions reserved: {rep['regions_reserved']}")
+        print(json.dumps(rep["criterion"], indent=2))
+        print(f"{rep['events']} events -> {args.trace_out} "
+              "(load in ui.perfetto.dev)")
+        raise SystemExit(0 if rep["ok"] else 1)
     rep = run_json(smoke=args.smoke, out_path=args.out)
     for sc in rep["scenarios"]:
         for p in sc["planes"]:

@@ -225,6 +225,10 @@ def solve_batch(
             stats.validated &= st.validated
             stats.preemptions += st.preemptions
             stats.defrag_rounds += st.defrag_rounds
+            # non-additive: keep the first backend impl seen rather than
+            # dropping it on the floor (per-impl counts live in the
+            # telemetry registry / OnlineStats.kernel_impls)
+            stats.kernel_impl = stats.kernel_impl or st.kernel_impl
     if view is not None and not view.is_identity:
         mappings = [
             view.uncompact_mapping(m) if m is not None else None

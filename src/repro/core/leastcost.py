@@ -335,9 +335,13 @@ def _leastcost_dp_batched(tensors, B: int, n: int, p: int, max_rounds: int,
         # the EPS_IMPROVE update is monotone, so any change is a decrease
         return t + 1, Cn, pvn, pjn, jnp.any(Cn < C)
 
-    t, Cp, pvp, pjp, _ = jax.lax.while_loop(
-        cond, body, (0, *state0, jnp.array(True))
-    )
+    # named scope = free trace-time metadata: the relaxation loop shows up
+    # as one labeled block in XLA/Perfetto profiles (repro.obs annotate()
+    # wraps the dispatch side; this labels the compiled computation itself)
+    with jax.named_scope(f"minplus_dp_batched[{impl}]"):
+        t, Cp, pvp, pjp, _ = jax.lax.while_loop(
+            cond, body, (0, *state0, jnp.array(True))
+        )
     C, par_v, par_j = Cp[:B, :n, :K], pvp[:B, :n, :K], pjp[:B, :n, :K]
 
     # answer per request: min over j<p_eff of C[dst, j] + tail placed on dst

@@ -46,6 +46,7 @@ import numpy as np
 from . import engine
 from .graph import DataflowPath, Mapping, ResourceGraph, validate_mapping
 from .residual import ResidualState
+from ..obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -94,6 +95,10 @@ class OnlineStats:
     conflict_resolve_ms: float = 0.0  # individual conflict re-solves, end to end
     solves: int = 0  # DP solves issued (a micro-batch counts once)
     solve_n_sum: int = 0  # summed padded node dimension of those solves
+    # solves per kernel backend ("pallas" / "ref" / native impl name):
+    # non-additive engine.Stats fields (kernel_impl) carried as labeled
+    # counts instead of last-writer-wins when stats fold across regions
+    kernel_impls: dict = dataclasses.field(default_factory=dict)
 
     @property
     def mean_solve_n(self) -> float:
@@ -101,6 +106,14 @@ class OnlineStats:
         compacted regional substrate shrinks from the global ``n`` to the
         region-local ``n_r`` (bench_messages solve-size column)."""
         return self.solve_n_sum / self.solves if self.solves else 0.0
+
+    def clone(self) -> "OnlineStats":
+        """Deep-enough copy for snapshot/restore: ``dataclasses.replace``
+        would alias ``kernel_impls`` and leak post-snapshot mutations
+        through a rollback."""
+        c = dataclasses.replace(self)
+        c.kernel_impls = dict(self.kernel_impls)
+        return c
 
 
 def _edge_loads(df: DataflowPath, mapping: Mapping) -> dict:
@@ -160,6 +173,7 @@ class OnlinePlacer:
         method: str = "leastcost_jax",
         use_kernel: bool = False,
         view=None,
+        tracer=None,
         **solve_cfg,
     ):
         """``use_kernel=True`` serves admissions through the fused batched
@@ -177,7 +191,13 @@ class OnlinePlacer:
         in the view's local id space (``view.compact_df``); owners of
         global id spaces (the regional 2PC broker) translate at their
         boundary and can read the bijection back from ``placer.view``.
+
+        ``tracer`` (:class:`repro.obs.Tracer`) records solve/commit spans;
+        defaults to the no-op :data:`repro.obs.NULL` — tracing is purely
+        observational (wall clock only), so enabling it never changes an
+        admission decision.
         """
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
         self.view = view
         if view is not None:
             rg = view.compact_graph(rg) if rg.n == view.n_global else rg
@@ -277,7 +297,7 @@ class OnlinePlacer:
         commit in full or leave no trace."""
         snap = self.res.snapshot()
         snap["tickets"] = dict(self.tickets)
-        snap["stats"] = dataclasses.replace(self.stats)
+        snap["stats"] = self.stats.clone()
         return snap
 
     def restore(self, snap: dict) -> None:
@@ -288,7 +308,7 @@ class OnlinePlacer:
         are *invalidated* at commit, never optimistically applied."""
         self.res.restore(snap)
         self.tickets = dict(snap["tickets"])
-        self.stats = dataclasses.replace(snap["stats"])
+        self.stats = snap["stats"].clone()
 
     def rekey(self, new: Ticket, tid: int) -> Ticket:
         """Re-register a freshly committed ticket under a prior tid, so the
@@ -308,6 +328,16 @@ class OnlinePlacer:
         ok, _why = validate_mapping(rg, df, mapping)
         return ok
 
+    def _note_solve(self, st) -> None:
+        """Fold one engine.Stats into the lifetime counters, keeping the
+        non-additive ``kernel_impl`` as a labeled count."""
+        self.stats.solve_ms += st.solve_ms
+        self.stats.solves += 1
+        self.stats.solve_n_sum += st.solve_n
+        if st.kernel_impl:
+            k = self.stats.kernel_impls
+            k[st.kernel_impl] = k.get(st.kernel_impl, 0) + 1
+
     def admit(self, df: DataflowPath, *, tenant: str = "",
               klass: int = 0) -> Optional[Ticket]:
         """Place one request against the current residual network."""
@@ -315,10 +345,10 @@ class OnlinePlacer:
             self.stats.rejected += 1
             return None
         rg = self.residual_graph()
-        mapping, st = engine.solve(rg, df, method=self.method, **self.solve_cfg)
-        self.stats.solve_ms += st.solve_ms
-        self.stats.solves += 1
-        self.stats.solve_n_sum += st.solve_n
+        with self.tracer.span("solve", track="placer", cat="solve"):
+            mapping, st = engine.solve(rg, df, method=self.method,
+                                       **self.solve_cfg)
+        self._note_solve(st)
         if not self._admissible(df, mapping, rg):
             self.stats.rejected += 1
             return None
@@ -397,12 +427,14 @@ class OnlinePlacer:
             self.stats.solve_ms, self.stats.solves, self.stats.solve_n_sum)
         overhead_ms = self.stats.overhead_ms
         conflict_ms = self.stats.conflict_resolve_ms
+        kernel_impls = dict(self.stats.kernel_impls)
         self.restore(snap)
         self.stats.solve_ms = solve_ms
         self.stats.overhead_ms = overhead_ms
         self.stats.conflict_resolve_ms = conflict_ms
         self.stats.solves = solves
         self.stats.solve_n_sum = solve_n_sum
+        self.stats.kernel_impls = kernel_impls
         return None, []
 
     def _dispatch_solve(self, dfs: list[DataflowPath]) -> engine.PendingBatchSolve:
@@ -419,10 +451,13 @@ class OnlinePlacer:
         if self.method in engine.BATCHED_METHODS:
             cfg = dict(cfg, bucket_batch=True)
             graph_tensors = self.res.device_tensors()
-        return engine.solve_batch_dispatch(
-            self.residual_graph(), list(dfs), method=self.method,
-            graph_tensors=graph_tensors, **cfg,
-        )
+        with self.tracer.span("dispatch", track="placer", cat="solve",
+                              batch=len(dfs)), \
+                self.tracer.annotate("minplus.dispatch"):
+            return engine.solve_batch_dispatch(
+                self.residual_graph(), list(dfs), method=self.method,
+                graph_tensors=graph_tensors, **cfg,
+            )
 
     def dispatch_admit(
         self,
@@ -471,39 +506,46 @@ class OnlinePlacer:
             # validation against residuals can't always see) — invalidate,
             # re-solve on the current network
             self.stats.stale_batches += 1
-            mappings, st = self._dispatch_solve(dfs).finalize()
+            with self.tracer.span("solve.resolve_stale", track="placer",
+                                  cat="solve", batch=len(dfs)):
+                mappings, st = self._dispatch_solve(dfs).finalize()
         else:
-            mappings, st = pending.handle.finalize()
-        self.stats.solve_ms += st.solve_ms
-        self.stats.solves += 1
-        self.stats.solve_n_sum += st.solve_n
+            with self.tracer.span("solve.wait", track="placer", cat="solve",
+                                  batch=len(dfs)):
+                mappings, st = pending.handle.finalize()
+        self._note_solve(st)
+        span = self.tracer.span("validate.commit", track="placer",
+                                cat="admit", batch=len(dfs))
         t_host = time.perf_counter()
         conflict_ms = 0.0
         out: list[Optional[Ticket]] = []
-        current = self.residual_graph()
-        for df, m, (tenant, klass) in zip(dfs, mappings, metas):
-            if (
-                m is not None
-                and self.node_up[df.src]
-                and self.node_up[df.dst]
-                and self._admissible(df, m, current)
-            ):
-                self.stats.admitted += 1
-                out.append(self._commit(df, m, tenant=tenant, klass=klass))
-                current = self.residual_graph()
-            elif m is not None:
-                # stale snapshot (a commit since dispatch took the capacity)
-                # — optimistic-concurrency retry, individually
-                self.stats.batch_conflicts += 1
-                t0 = time.perf_counter()
-                t = self.admit(df, tenant=tenant, klass=klass)
-                conflict_ms += 1e3 * (time.perf_counter() - t0)
-                out.append(t)
-                if t is not None:
+        with span:
+            current = self.residual_graph()
+            for df, m, (tenant, klass) in zip(dfs, mappings, metas):
+                if (
+                    m is not None
+                    and self.node_up[df.src]
+                    and self.node_up[df.dst]
+                    and self._admissible(df, m, current)
+                ):
+                    self.stats.admitted += 1
+                    out.append(self._commit(df, m, tenant=tenant, klass=klass))
                     current = self.residual_graph()
-            else:
-                self.stats.rejected += 1
-                out.append(None)
+                elif m is not None:
+                    # stale snapshot (a commit since dispatch took the
+                    # capacity) — optimistic-concurrency retry, individually
+                    self.stats.batch_conflicts += 1
+                    t0 = time.perf_counter()
+                    with self.tracer.span("conflict.resolve", track="placer",
+                                          cat="admit"):
+                        t = self.admit(df, tenant=tenant, klass=klass)
+                    conflict_ms += 1e3 * (time.perf_counter() - t0)
+                    out.append(t)
+                    if t is not None:
+                        current = self.residual_graph()
+                else:
+                    self.stats.rejected += 1
+                    out.append(None)
         self.stats.conflict_resolve_ms += conflict_ms
         self.stats.overhead_ms += 1e3 * (time.perf_counter() - t_host) - conflict_ms
         return out
@@ -666,6 +708,10 @@ class AdmissionPipeline:
         ``(pending, tickets)`` for each batch committed by this call — the
         pending carries the caller's dispatch-time ``tag``."""
         if dfs:
+            tr = self.placer.tracer
+            if tr.enabled:
+                tr.instant("pipeline.push", track="placer", cat="pipeline",
+                           batch=len(dfs), in_flight=len(self._q))
             self._q.append(self.placer.dispatch_admit(dfs, metas, tag=tag))
         out = []
         while len(self._q) >= self.depth:

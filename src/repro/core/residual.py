@@ -69,6 +69,10 @@ class ResidualState:
         self._dev: dict | None = None  # {"cap","bw","lat"} jnp tensors
         self._node_delta: dict[int, float] = {}  # node -> pending cap delta
         self._edge_delta: dict[tuple, float] = {}  # (u,v) -> pending bw delta
+        # telemetry (repro.obs registry reads these): how often the device
+        # mirror paid a full O(n^2) upload vs an O(delta) scatter-add
+        self.sync_stats = {"full_uploads": 0, "delta_syncs": 0,
+                           "invalidations": 0}
 
     # -- host truth ---------------------------------------------------------
 
@@ -119,6 +123,7 @@ class ResidualState:
         self._dev = None
         self._node_delta.clear()
         self._edge_delta.clear()
+        self.sync_stats["invalidations"] += 1
 
     # -- snapshot / restore -------------------------------------------------
 
@@ -175,7 +180,10 @@ class ResidualState:
             )
             self._node_delta.clear()
             self._edge_delta.clear()
+            self.sync_stats["full_uploads"] += 1
             return self._dev
+        if self._node_delta or self._edge_delta:
+            self.sync_stats["delta_syncs"] += 1
         # delta lengths are padded to the next power of two (pad entries add
         # 0.0 at index 0 — a no-op under scatter-ADD), so the jitted update
         # compiles O(log n) shape specializations, not one per delta size

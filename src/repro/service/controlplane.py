@@ -36,6 +36,8 @@ import numpy as np
 from ..core import engine
 from ..core.graph import DataflowPath, ResourceGraph
 from ..core.online import OnlinePlacer, Ticket
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import defrag as defrag_mod
 from .policy import FairSharePolicy, TenantConfig, may_preempt
 
@@ -131,6 +133,7 @@ class ControlPlane:
         method: str = "leastcost_jax",
         use_kernel: bool = False,
         view=None,
+        tracer=None,
         **solve_cfg,
     ):
         """``view`` (a :class:`~repro.core.compact.CompactedView`) makes
@@ -145,7 +148,12 @@ class ControlPlane:
         batch k+1's device DP overlaps batch k's validation/commit.  Depth
         1 (default) is the synchronous path, bit for bit.  In-flight
         batches persist across ``pump`` calls (``conservation()`` counts
-        them); :meth:`flush` forces them all to commit."""
+        them); :meth:`flush` forces them all to commit.
+
+        ``tracer`` (:class:`repro.obs.Tracer`) records request-lifecycle
+        flow events (submit/dispatch/admit/reject/preempt/release) and
+        pump/solve/defrag spans; defaults to the no-op
+        :data:`repro.obs.NULL`."""
         assert int(regions) <= 1, "regions > 1 is dispatched in __new__"
         # nesting kwargs are facade-dispatched in __new__; reaching this
         # body with either set means a direct centralized construction
@@ -161,8 +169,10 @@ class ControlPlane:
                 f"branching={branching} requires a hierarchical plane "
                 "(levels >= 2)"
             )
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
         self.placer = OnlinePlacer(
-            rg, method=method, use_kernel=use_kernel, view=view, **solve_cfg
+            rg, method=method, use_kernel=use_kernel, view=view,
+            tracer=self.tracer, **solve_cfg
         )
         self.policy = policy or FairSharePolicy()
         self.micro_batch = int(micro_batch)
@@ -220,6 +230,9 @@ class ControlPlane:
         r = Request(next(self._rid), tenant, df, klass=klass)
         self._enqueue(st.queue, r)
         st.submitted += 1
+        if self.tracer.enabled:
+            self.tracer.flow_begin(r.rid, "submit", tenant=tenant,
+                                   klass=klass, p=int(df.p))
         return r.rid
 
     # -- live accounting -----------------------------------------------------
@@ -288,6 +301,9 @@ class ControlPlane:
 
     def _drop(self, req: Request) -> None:
         self.tenants[req.tenant].dropped += 1
+        if self.tracer.enabled:
+            self.tracer.flow_end(req.rid, "drop", outcome="dropped",
+                                 attempts=req.attempts)
         if self.on_drop is not None:
             self.on_drop(req)
 
@@ -307,6 +323,9 @@ class ControlPlane:
             vreq, _ = self._deactivate(vrid)
             vreq.attempts = 0
             self.tenants[vreq.tenant].preempted += 1
+            if self.tracer.enabled:
+                self.tracer.flow_point(vreq.rid, "preempt",
+                                       tenant=vreq.tenant, klass=vreq.klass)
             owned.append(vreq)
         # front-of-class insertion reverses a batch; requeue back-to-front
         # so displaced work keeps its relative (FIFO-within-class) order
@@ -339,6 +358,8 @@ class ControlPlane:
         """A drained request the placer could not fit: try class preemption,
         else retry later (bounded) or drop."""
         req.attempts += 1
+        if self.tracer.enabled:
+            self.tracer.flow_point(req.rid, "reject", attempts=req.attempts)
         ticket = self._try_preempt(req)
         if ticket is not None:
             return ticket
@@ -379,27 +400,31 @@ class ControlPlane:
         admitted: list[Ticket] = []
         cfgs = {t: st.cfg for t, st in self.tenants.items()}
         for _ in range(rounds):
-            queues = {t: st.queue for t, st in self.tenants.items()}
-            committed = self.committed_capacity()
-            for t, c in (extra_committed or {}).items():
-                if t in committed:
-                    committed[t] += float(c)
-            picked = self.policy.select(
-                cfgs, queues, committed, self.micro_batch
-            )
-            if not picked:
-                break
-            for r in picked:  # selection reads per-tenant heads in order
-                q = self.tenants[r.tenant].queue
-                assert q[0] is r, "policy must select queue heads in order"
-                q.popleft()
-            pending = self.placer.dispatch_admit(
-                [r.df for r in picked],
-                metas=[(r.tenant, r.klass) for r in picked],
-            )
-            self._inflight.append((picked, pending))
-            while len(self._inflight) >= self.pipeline_depth:
-                admitted.extend(self._commit_oldest())
+            with self.tracer.span("pump.round", track="plane", cat="pump"):
+                queues = {t: st.queue for t, st in self.tenants.items()}
+                committed = self.committed_capacity()
+                for t, c in (extra_committed or {}).items():
+                    if t in committed:
+                        committed[t] += float(c)
+                picked = self.policy.select(
+                    cfgs, queues, committed, self.micro_batch
+                )
+                if not picked:
+                    break
+                for r in picked:  # selection reads per-tenant heads in order
+                    q = self.tenants[r.tenant].queue
+                    assert q[0] is r, "policy must select queue heads in order"
+                    q.popleft()
+                    if self.tracer.enabled:
+                        self.tracer.flow_point(r.rid, "dispatch",
+                                               attempts=r.attempts)
+                pending = self.placer.dispatch_admit(
+                    [r.df for r in picked],
+                    metas=[(r.tenant, r.klass) for r in picked],
+                )
+                self._inflight.append((picked, pending))
+                while len(self._inflight) >= self.pipeline_depth:
+                    admitted.extend(self._commit_oldest())
         # a later preemption in the same pump may have displaced an earlier
         # admission: hand back only handles that are still live
         return [t for t in admitted if self.placer.tickets.get(t.tid) is t]
@@ -419,6 +444,8 @@ class ControlPlane:
         for r, t in zip(picked, tickets):
             if t is not None:
                 self._activate(r, t)
+                if self.tracer.enabled:
+                    self.tracer.flow_point(r.rid, "admit", tid=t.tid)
                 out.append(t)
         for r, t in zip(picked, tickets):
             if t is None:
@@ -442,6 +469,8 @@ class ControlPlane:
         req, ticket = self._deactivate(rid)
         self.placer.release(ticket)
         self.tenants[req.tenant].released += 1
+        if self.tracer.enabled:
+            self.tracer.flow_end(rid, "release", outcome="released")
 
     def _reconcile_churn(
         self, remapped: list[Ticket], dropped: list[Ticket]
@@ -550,10 +579,13 @@ class ControlPlane:
         # snapshot/restore would fence out any in-flight window anyway
         self.flush()
         extras = self._fair_queue_heads(max_extras)
-        result = defrag_mod.defrag(
-            self.placer,
-            extras=[(r.df, (r.tenant, r.klass)) for r in extras],
-        )
+        with self.tracer.span("defrag", track="plane", cat="defrag",
+                              standing=len(self.placer.tickets),
+                              extras=len(extras)):
+            result = defrag_mod.defrag(
+                self.placer,
+                extras=[(r.df, (r.tenant, r.klass)) for r in extras],
+            )
         if result.committed:
             # standing tickets were re-placed under their old tids: refresh
             # the handles the active table holds
@@ -567,6 +599,28 @@ class ControlPlane:
 
     # -- reporting -----------------------------------------------------------
 
+    @staticmethod
+    def _consensus_impl(counts: dict) -> str:
+        """Fold per-impl solve counts back into the single ``kernel_impl``
+        slot: the one impl when unanimous, ``"mixed(a,b)"`` otherwise —
+        never last-writer-wins (the labeled truth lives in the registry)."""
+        if not counts:
+            return ""
+        if len(counts) == 1:
+            return next(iter(counts))
+        return "mixed(" + ",".join(sorted(counts)) + ")"
+
+    def _kernel_impl_counts(self) -> dict:
+        """Solves per kernel backend — the labeled carrier for the
+        non-additive ``Stats.kernel_impl`` across regional merges."""
+        return dict(self.placer.stats.kernel_impls)
+
+    def _solve_counts(self) -> tuple[int, int]:
+        """``(solves, solve_n_sum)`` — the additive carrier for the
+        non-additive ``Stats.solve_n`` (a mean) across regional merges."""
+        st = self.placer.stats
+        return st.solves, st.solve_n_sum
+
     def engine_stats(self) -> engine.Stats:
         """The service-level story in the engine's unified Stats vocabulary
         (preemptions / defrag rounds next to solver wall-clock)."""
@@ -579,7 +633,33 @@ class ControlPlane:
         s.conflict_resolve_ms = st.conflict_resolve_ms
         s.stale_batches = st.stale_batches
         s.batch_size = self.micro_batch
+        # non-additive fields, carried through the labeled counters
+        # instead of being dropped (or last-writer-won) on the fold
+        s.kernel_impl = self._consensus_impl(self._kernel_impl_counts())
+        solves, n_sum = self._solve_counts()
+        if solves:
+            s.solve_n = round(n_sum / solves)
         return s
+
+    def metrics_registry(self) -> obs_metrics.MetricsRegistry:
+        """This plane's stats surfaces as one labeled registry snapshot
+        (see ``repro.obs.metrics``).  Parent planes merge per-region
+        registries under a composed ``plane`` label — mirroring the
+        gossip aggregation, a plane only reports what it can see."""
+        reg = obs_metrics.MetricsRegistry()
+        obs_metrics.absorb_online_stats(reg, self.placer.stats)
+        for k, v in self.placer.res.sync_stats.items():
+            if v:
+                reg.inc(f"residual.{k}", float(v))
+        committed = self.committed_capacity()
+        for t, st in self.tenants.items():
+            reg.gauge("tenant.committed", committed[t], tenant=t)
+            by_klass: dict[int, int] = {}
+            for r in st.queue:
+                by_klass[r.klass] = by_klass.get(r.klass, 0) + 1
+            for k, c in by_klass.items():
+                reg.gauge("queue.depth", float(c), tenant=t, klass=str(k))
+        return reg
 
     def warmup(self, *, max_batch: Optional[int] = None, p: int = 5) -> int:
         """Pre-compile the jit buckets admission will hit (delegates to

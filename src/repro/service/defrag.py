@@ -85,12 +85,14 @@ def defrag(
 
     # clear the standing set; re-solve it as one batched solve on the blank
     # residual (stats churn from this speculative work is reconciled below)
-    for t in standing:
-        placer.release(t, reason=None)
-    new = placer.admit_many(
-        [t.df for t in standing],
-        metas=[(t.tenant, t.klass) for t in standing],
-    )
+    with placer.tracer.span("defrag.repack", track="placer", cat="defrag",
+                            standing=len(standing)):
+        for t in standing:
+            placer.release(t, reason=None)
+        new = placer.admit_many(
+            [t.df for t in standing],
+            metas=[(t.tenant, t.klass) for t in standing],
+        )
     ok = all(nt is not None for nt in new)
 
     def _admit_extras() -> list[tuple[int, Ticket]]:
@@ -120,12 +122,14 @@ def defrag(
     overhead_ms = placer.stats.overhead_ms
     conflict_ms = placer.stats.conflict_resolve_ms
     solves, solve_n_sum = placer.stats.solves, placer.stats.solve_n_sum
+    kernel_impls = dict(placer.stats.kernel_impls)
     if not repacked:
         placer.restore(snap)
         placer.stats.solve_ms = solve_ms
         placer.stats.overhead_ms = overhead_ms
         placer.stats.conflict_resolve_ms = conflict_ms
         placer.stats.solves, placer.stats.solve_n_sum = solves, solve_n_sum
+        placer.stats.kernel_impls = kernel_impls
         # fallback: keep the standing placement, retry the extras on the
         # current residual (probe rejections are not service rejections)
         readmitted = _admit_extras()
@@ -145,11 +149,12 @@ def defrag(
 
     # committed re-pack: rebase stats on the snapshot so the speculative
     # release/re-admit churn vanishes and only the net effect remains
-    stats = dataclasses.replace(snap["stats"])
+    stats = snap["stats"].clone()
     stats.solve_ms = solve_ms
     stats.overhead_ms = overhead_ms
     stats.conflict_resolve_ms = conflict_ms
     stats.solves, stats.solve_n_sum = solves, solve_n_sum
+    stats.kernel_impls = kernel_impls
     stats.admitted += len(readmitted)
     stats.defrag_rounds += 1
     stats.defrag_commits += 1

@@ -76,6 +76,10 @@ class GossipBus:
         self.records_sent = 0  # ShareRecords carried across all messages
         self.payload_sent = 0  # scalar fields carried (records x record size)
         self.rounds = 0
+        # window baselines for snapshot(reset=True): the lifetime counters
+        # above are never rewound (CI gates read them directly)
+        self._win_base = {"rounds": 0, "messages_sent": 0,
+                          "records_sent": 0, "payload_sent": 0}
 
     # -- publication / dissemination ----------------------------------------
 
@@ -157,6 +161,28 @@ class GossipBus:
             "payload_per_round": self.payload_sent / rounds,
             "records_per_message": self.records_sent / msgs,
         }
+
+    def snapshot(self, *, reset: bool = False) -> dict:
+        """Windowed :meth:`gossip_stats`: counters since the last
+        ``snapshot(reset=True)`` (or construction).  ``reset=True`` closes
+        the window — benchmark sweeps call this per point so rounds don't
+        accumulate across points.  The lifetime counters
+        (``messages_sent`` etc.) are baselined, never rewound."""
+        win = {k: getattr(self, k) - v for k, v in self._win_base.items()}
+        rounds = max(win["rounds"], 1)
+        msgs = max(win["messages_sent"], 1)
+        out = {
+            "n_regions": self.n_regions,
+            "fanout": self.fanout,
+            **win,
+            "messages_per_round": win["messages_sent"] / rounds,
+            "records_per_round": win["records_sent"] / rounds,
+            "payload_per_round": win["payload_sent"] / rounds,
+            "records_per_message": win["records_sent"] / msgs,
+        }
+        if reset:
+            self._win_base = {k: getattr(self, k) for k in self._win_base}
+        return out
 
     # -- estimates -----------------------------------------------------------
 

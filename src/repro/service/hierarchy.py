@@ -51,6 +51,8 @@ import numpy as np
 from ..core import engine
 from ..core.compact import CompactedView
 from ..core.graph import DataflowPath, ResourceGraph
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .controlplane import ControlPlane, Request, TenantState
 from .gossip import GossipBus
 from .policy import FairSharePolicy, TenantConfig, fairness_summary
@@ -146,9 +148,13 @@ class HierarchicalControlPlane(ChainBroker):
         gossip_period: int = 1,
         max_cut_attempts: int = 4,
         seed: int = 0,
+        tracer=None,
         **solve_cfg,
     ):
         self.base = rg
+        # each child gets a scoped view of this tracer ("g{g}/" prefixes),
+        # so flow ids and track names nest the way the planes do
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
         assign = None
         if region_of is not None:
             assign = validate_region_of(rg, region_of)
@@ -186,7 +192,8 @@ class HierarchicalControlPlane(ChainBroker):
                          else leaves if (regions is not None
                                          or branching is not None)
                          else None),
-                region_of=assign, seed=seed, **child_kw,
+                region_of=assign, seed=seed,
+                tracer=self.tracer.scoped("g0"), **child_kw,
             )]
         else:
             self.B = self.branching
@@ -210,13 +217,14 @@ class HierarchicalControlPlane(ChainBroker):
                         base_g,
                         regions=(None if inner is not None else self.branching),
                         region_of=inner, seed=seed + 1000 * (g + 1),
-                        **child_kw,
+                        tracer=self.tracer.scoped(f"g{g}"), **child_kw,
                     )
                 else:
                     child = HierarchicalControlPlane(
                         base_g, levels=self.levels - 1,
                         branching=self.branching, region_of=inner,
-                        seed=seed + 1000 * (g + 1), **child_kw,
+                        seed=seed + 1000 * (g + 1),
+                        tracer=self.tracer.scoped(f"g{g}"), **child_kw,
                     )
                 self.children.append(child)
         # link child views into the derivation chain so a leaf churn's
@@ -303,6 +311,11 @@ class HierarchicalControlPlane(ChainBroker):
             ControlPlane._enqueue(
                 self._span_q[ga][tenant], Request(rid, tenant, df, klass=klass)
             )
+            if self.tracer.enabled:
+                self.tracer.flow_begin(
+                    rid, "submit", tenant=tenant, klass=klass,
+                    spanning=True, home=ga,
+                )
         return rid
 
     # -- live accounting -----------------------------------------------------
@@ -397,7 +410,9 @@ class HierarchicalControlPlane(ChainBroker):
             for g in range(self.B):
                 self._publish(g)
             if self.B > 1 and self._pumps % self.gossip_period == 0:
-                self.bus.tick()
+                with self.tracer.span("gossip.round", track="gossip",
+                                      cat="gossip", round=self._pumps):
+                    self.bus.tick()
             for g, child in enumerate(self.children):
                 extra: dict[str, float] = dict(extra_committed or {})
                 if self.B > 1:
@@ -451,12 +466,20 @@ class HierarchicalControlPlane(ChainBroker):
                 if st is not None:
                     self.span_stats["admitted"] += 1
                     self.span_tenants[req.tenant].admitted += 1
+                    if self.tracer.enabled:
+                        self.tracer.flow_point(
+                            req.rid, "admit", chain=len(st.parts))
                     out.append(st)
                 else:
                     req.attempts += 1
                     if req.attempts >= self.max_attempts:
                         self.span_tenants[req.tenant].dropped += 1
                         self.span_stats["dropped"] += 1
+                        if self.tracer.enabled:
+                            self.tracer.flow_end(
+                                req.rid, "drop", outcome="dropped",
+                                attempts=req.attempts,
+                            )
                         if self.on_drop is not None:
                             self.on_drop(req.rid)
                     else:
@@ -479,18 +502,24 @@ class HierarchicalControlPlane(ChainBroker):
         held: dict[int, int] = {}
         seg_local: dict[int, DataflowPath] = {}
         ok = True
+        tr = self.tracer
         for i, seg in enumerate(segs):
             self._twopc_msgs += 1  # prepare segment i
             g = chain[i]
             lseg = self.views[g].compact_df(seg)
-            crid = self.children[g].broker_admit(
-                req.tenant, lseg, klass=req.klass)
+            with tr.span("2pc.reserve", track="2pc", cat="2pc", group=g):
+                crid = self.children[g].broker_admit(
+                    req.tenant, lseg, klass=req.klass)
             if crid is None:
                 self._twopc_msgs += 1  # nack i
+                if tr.enabled:
+                    tr.flow_point(req.rid, "2pc.nack", region=g)
                 ok = False
                 break
             held[i] = crid
             seg_local[i] = lseg
+            if tr.enabled:
+                tr.flow_point(req.rid, "2pc.reserve", region=g)
         ok = ok and all(
             self.cut_residual[e] + _EPS >= float(df.breq[s])
             for s, e in zip(splits, gates)
@@ -498,9 +527,13 @@ class HierarchicalControlPlane(ChainBroker):
         if not ok:
             for i in sorted(held):
                 self._twopc_msgs += 1  # abort i
+                if tr.enabled:
+                    tr.flow_point(req.rid, "2pc.abort", region=chain[i])
                 self.children[chain[i]].broker_release(held[i])
             return None
         self._twopc_msgs += len(segs)  # commit every segment
+        if tr.enabled:
+            tr.flow_point(req.rid, "2pc.commit", chain=len(segs))
         cut_bws = [float(df.breq[s]) for s in splits]
         for e, b in zip(gates, cut_bws):
             self.cut_residual[e] -= b
@@ -655,6 +688,8 @@ class HierarchicalControlPlane(ChainBroker):
         self._teardown_span(st, skip=(g, crid))
         self.span_stats["displaced"] += 1
         self.span_tenants[st.tenant].preempted += 1
+        if self.tracer.enabled:
+            self.tracer.flow_point(rid, "displaced", group=g)
         self._drop_or_requeue(rid, st)
         if self._churn_collector is not None:
             self._churn_collector.append(st)
@@ -673,6 +708,8 @@ class HierarchicalControlPlane(ChainBroker):
             self._teardown_span(st)
             self.span_stats["displaced"] += 1
             self.span_tenants[st.tenant].preempted += 1
+            if self.tracer.enabled:
+                self.tracer.flow_point(rid, "displaced", churn=True)
             if rid in self._broker_held:
                 self._broker_held.discard(rid)
                 self.span_tenants[st.tenant].released += 1
@@ -700,6 +737,8 @@ class HierarchicalControlPlane(ChainBroker):
         if st is not None:
             self._teardown_span(st)
             self.span_tenants[st.tenant].released += 1
+            if self.tracer.enabled:
+                self.tracer.flow_end(rid, "release", outcome="released")
             return
         g, crid = self._local[rid]
         self.children[g].release(crid)  # raises if not active (caller bug)
@@ -826,6 +865,22 @@ class HierarchicalControlPlane(ChainBroker):
                     out.append((self.views[g].compose(child.views[r]), cp))
         return out
 
+    def _kernel_impl_counts(self) -> dict:
+        """Per-backend solve counts summed over the whole tree."""
+        out: dict[str, int] = {}
+        for child in self.children:
+            for k, v in child._kernel_impl_counts().items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def _solve_counts(self) -> tuple[int, int]:
+        solves = n_sum = 0
+        for child in self.children:
+            s, n = child._solve_counts()
+            solves += s
+            n_sum += n
+        return solves, n_sum
+
     def engine_stats(self) -> engine.Stats:
         s = engine.Stats(method=self.method)
         for child in self.children:
@@ -843,7 +898,25 @@ class HierarchicalControlPlane(ChainBroker):
         s.gossip_messages += self.bus.messages_sent
         s.twopc_messages += self._twopc_msgs
         s.messages_sent = s.gossip_messages + s.twopc_messages
+        solves, n_sum = self._solve_counts()
+        if solves:
+            s.solve_n = round(n_sum / solves)
+        s.kernel_impl = ControlPlane._consensus_impl(
+            self._kernel_impl_counts())
         return s
+
+    def metrics_registry(self) -> obs_metrics.MetricsRegistry:
+        """Children's registries merged under ``plane=g{g}`` (label paths
+        compose per level, e.g. ``g0/r1``), plus this level's gossip, 2PC
+        and spanning counters."""
+        reg = obs_metrics.MetricsRegistry()
+        for g, child in enumerate(self.children):
+            reg.merge(child.metrics_registry(), plane=f"g{g}")
+        obs_metrics.absorb_gossip_stats(reg, self.bus.gossip_stats())
+        obs_metrics.absorb_span_stats(reg, self.span_stats)
+        reg.inc("twopc.messages", float(self._twopc_msgs))
+        reg.gauge("plane.levels", float(self.levels))
+        return reg
 
     def solve_size_report(self) -> dict:
         per = []
@@ -913,6 +986,12 @@ class HierarchicalControlPlane(ChainBroker):
             {t: st.cfg.weight for t, st in self.span_tenants.items()},
         )
         rep["coordination"] = self.coordination_report()
+        timing = {"solve_ms": 0.0, "overhead_ms": 0.0,
+                  "conflict_resolve_ms": 0.0}
+        for child in self.children:
+            for k, v in child.fairness_report()["timing"].items():
+                timing[k] += v
+        rep["timing"] = timing
         return rep
 
     def check_invariants(self) -> None:

@@ -66,6 +66,8 @@ from ..core import engine
 from ..core.compact import CompactedView
 from ..core.graph import INF, DataflowPath, ResourceGraph
 from ..core.online import Ticket
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .controlplane import ControlPlane, Request, TenantState
 from .gossip import GossipBus
 from .policy import FairSharePolicy, TenantConfig, fairness_summary
@@ -509,6 +511,7 @@ class RegionalControlPlane(ChainBroker):
         gossip_period: int = 1,
         max_cut_attempts: int = 4,
         seed: int = 0,
+        tracer=None,
         **solve_cfg,
     ):
         self.base = rg
@@ -550,6 +553,10 @@ class RegionalControlPlane(ChainBroker):
         self.pipeline_depth = max(1, int(pipeline_depth))
         self.method = method
         self.max_cut_attempts = int(max_cut_attempts)
+        # the broker's tracer; each region gets a scoped view sharing the
+        # same event buffer ("r{r}/" track prefixes, so region-local rids
+        # never collide with broker-level flow ids)
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
         # the compacted solve substrate: one global<->local bijection per
         # region; every regional plane below is sized n_r, not n
         self.views = [
@@ -568,6 +575,7 @@ class RegionalControlPlane(ChainBroker):
                 pipeline_depth=pipeline_depth,
                 method=method,
                 use_kernel=use_kernel,
+                tracer=self.tracer.scoped(f"r{r}"),
                 **solve_cfg,
             )
             for r in range(self.R)
@@ -663,6 +671,11 @@ class RegionalControlPlane(ChainBroker):
             ControlPlane._enqueue(
                 self._span_q[ra][tenant], Request(rid, tenant, df, klass=klass)
             )
+            if self.tracer.enabled:
+                self.tracer.flow_begin(
+                    rid, "submit", tenant=tenant, klass=klass,
+                    spanning=True, home=ra,
+                )
         return rid
 
     # -- live accounting -----------------------------------------------------
@@ -792,7 +805,9 @@ class RegionalControlPlane(ChainBroker):
             for r in range(self.R):
                 self._publish(r)
             if self.R > 1 and self._pumps % self.gossip_period == 0:
-                self.bus.tick()
+                with self.tracer.span("gossip.round", track="gossip",
+                                      cat="gossip", round=self._pumps):
+                    self.bus.tick()
             for r, cp in enumerate(self.regions):
                 extra: dict[str, float] = dict(extra_committed or {})
                 if self.R > 1:
@@ -869,12 +884,20 @@ class RegionalControlPlane(ChainBroker):
                 if st is not None:
                     self.span_stats["admitted"] += 1
                     self.span_tenants[req.tenant].admitted += 1
+                    if self.tracer.enabled:
+                        self.tracer.flow_point(
+                            req.rid, "admit", chain=len(st.parts))
                     out.append(st)
                 else:
                     req.attempts += 1
                     if req.attempts >= self.max_attempts:
                         self.span_tenants[req.tenant].dropped += 1
                         self.span_stats["dropped"] += 1
+                        if self.tracer.enabled:
+                            self.tracer.flow_end(
+                                req.rid, "drop", outcome="dropped",
+                                attempts=req.attempts,
+                            )
                         if self.on_drop is not None:
                             self.on_drop(req.rid)
                     else:
@@ -1039,26 +1062,41 @@ class RegionalControlPlane(ChainBroker):
         segs = split_dataflow_chain(df, splits, gates)
         held: dict[int, Ticket] = {}
         failed: list[int] = []
+        tr = self.tracer
         for i, seg in enumerate(segs):
             self._twopc_msgs += 1  # prepare segment i
-            t = self._reserve_plain(chain[i], seg, req.tenant, req.klass)
+            with tr.span("2pc.reserve", track="2pc", cat="2pc",
+                         region=chain[i]):
+                t = self._reserve_plain(chain[i], seg, req.tenant, req.klass)
             if t is None:
                 self._twopc_msgs += 1  # nack i
+                if tr.enabled:
+                    tr.flow_point(req.rid, "2pc.nack", region=chain[i])
                 failed.append(i)
                 if not can_preempt or len(failed) > 1:
                     break  # candidate dead: >1 blocker can't be rescued
             else:
                 held[i] = t
+                if tr.enabled:
+                    tr.flow_point(req.rid, "2pc.reserve", region=chain[i])
         if len(failed) == 1 and can_preempt and len(held) == len(segs) - 1:
             i = failed[0]
             self._twopc_msgs += 1  # prepare i, preemptive retry (last)
-            t = self._reserve_preempting(chain[i], segs[i],
-                                         req.tenant, req.klass)
+            with tr.span("2pc.reserve.preempt", track="2pc", cat="2pc",
+                         region=chain[i]):
+                t = self._reserve_preempting(chain[i], segs[i],
+                                             req.tenant, req.klass)
             if t is None:
                 self._twopc_msgs += 1  # nack i
+                if tr.enabled:
+                    tr.flow_point(req.rid, "2pc.nack", region=chain[i],
+                                  preempting=True)
             else:
                 held[i] = t
                 failed = []
+                if tr.enabled:
+                    tr.flow_point(req.rid, "2pc.reserve", region=chain[i],
+                                  preempting=True)
         ok = not failed and len(held) == len(segs) and all(
             self.cut_residual[e] + _EPS >= float(df.breq[s])
             for s, e in zip(splits, gates)
@@ -1066,9 +1104,13 @@ class RegionalControlPlane(ChainBroker):
         if not ok:
             for i in sorted(held):
                 self._twopc_msgs += 1  # abort i
+                if tr.enabled:
+                    tr.flow_point(req.rid, "2pc.abort", region=chain[i])
                 self._abort_reservation(chain[i], held[i])
             return None
         self._twopc_msgs += len(segs)  # commit every segment
+        if tr.enabled:
+            tr.flow_point(req.rid, "2pc.commit", chain=len(segs))
         return self._commit_spanning(
             req, chain, splits, gates, [held[i] for i in range(len(segs))]
         )
@@ -1149,6 +1191,8 @@ class RegionalControlPlane(ChainBroker):
         old_parts = [part] + self._teardown_span(st, skip=(r, part.tid))
         self.span_stats["displaced"] += 1
         self.span_tenants[st.tenant].preempted += 1
+        if self.tracer.enabled:
+            self.tracer.flow_point(rid, "displaced", region=r)
         if rid in self._broker_held:
             # a parent plane's reservation: its lifecycle here ends — the
             # parent tears down the composite and requeues at its level
@@ -1181,6 +1225,8 @@ class RegionalControlPlane(ChainBroker):
             # are regional bookkeeping, exactly like displacement
             self._teardown_span(st)
             self.span_tenants[st.tenant].released += 1
+            if self.tracer.enabled:
+                self.tracer.flow_end(rid, "release", outcome="released")
             return
         r, lrid = self._local[rid]
         self.regions[r].release(lrid)  # raises if not active (caller bug)
@@ -1202,6 +1248,8 @@ class RegionalControlPlane(ChainBroker):
             old += self._teardown_span(st)
             self.span_stats["displaced"] += 1
             self.span_tenants[st.tenant].preempted += 1
+            if self.tracer.enabled:
+                self.tracer.flow_point(rid, "displaced", churn=True)
             if rid in self._broker_held:
                 self._broker_held.discard(rid)
                 self.span_tenants[st.tenant].released += 1
@@ -1341,6 +1389,22 @@ class RegionalControlPlane(ChainBroker):
 
     # -- reporting / invariants ----------------------------------------------
 
+    def _kernel_impl_counts(self) -> dict:
+        """Per-backend solve counts summed over every region's placer."""
+        out: dict[str, int] = {}
+        for cp in self.regions:
+            for k, v in cp._kernel_impl_counts().items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def _solve_counts(self) -> tuple[int, int]:
+        solves = n_sum = 0
+        for cp in self.regions:
+            s, n = cp._solve_counts()
+            solves += s
+            n_sum += n
+        return solves, n_sum
+
     def engine_stats(self) -> engine.Stats:
         s = engine.Stats(method=self.method)
         s.preemptions = sum(
@@ -1359,11 +1423,26 @@ class RegionalControlPlane(ChainBroker):
         s.gossip_messages = self.bus.messages_sent
         s.twopc_messages = self._twopc_msgs
         s.messages_sent = s.gossip_messages + s.twopc_messages
-        solves = sum(cp.placer.stats.solves for cp in self.regions)
+        solves, n_sum = self._solve_counts()
         if solves:
-            s.solve_n = round(sum(
-                cp.placer.stats.solve_n_sum for cp in self.regions) / solves)
+            s.solve_n = round(n_sum / solves)
+        # the non-additive fields fold as labeled consensus, not a sum:
+        # the mix of backends that actually ran, never a silent drop
+        s.kernel_impl = ControlPlane._consensus_impl(
+            self._kernel_impl_counts())
         return s
+
+    def metrics_registry(self) -> obs_metrics.MetricsRegistry:
+        """One merged registry: every region's registry labeled
+        ``plane=r{r}`` (mirroring the gossip aggregation direction), plus
+        the broker's own gossip / 2PC / spanning counters."""
+        reg = obs_metrics.MetricsRegistry()
+        for r, cp in enumerate(self.regions):
+            reg.merge(cp.metrics_registry(), plane=f"r{r}")
+        obs_metrics.absorb_gossip_stats(reg, self.bus.gossip_stats())
+        obs_metrics.absorb_span_stats(reg, self.span_stats)
+        reg.inc("twopc.messages", float(self._twopc_msgs))
+        return reg
 
     def solve_size_report(self) -> dict:
         """The compute-locality story in numbers: the padded node
