@@ -234,6 +234,97 @@ def run_multi_hop(
     }
 
 
+def run_multi_hop_hotspot(
+    rows: int = 2,
+    cols: int = 3,
+    k: int = 3,
+    n_requests: int = 24,
+    pumps: int = 6,
+    chain_k: int = 2,
+    seed: int = 9,
+    method: str = "leastcost_python",
+):
+    """Gateway-hotspot scenario on a region grid: a standing reservation
+    saturates the (0, 1) cut, then every request pins src in region 0 /
+    dst in region 2 — the fewest-hop chain 0-1-2 runs through the hot
+    cut, but the grid has cold bypass chains around it.
+
+    Three planes serve the identical workload:
+
+    - ``uniform``: chain_k racer on the *cold* grid — the reference
+      admission rate with no hotspot;
+    - ``hot_single``: chain_k=1 on the hot grid — the legacy broker
+      burns every attempt on the one saturated chain (collapse);
+    - ``hot_k``: the chain_k racer on the hot grid — must route around
+      the hotspot and recover the uniform admission rate, inside the
+      single-chain 2PC candidate budget.
+    """
+    from repro.core import region_grid
+    from repro.service import FairSharePolicy, RegionalControlPlane
+
+    def _drive(ck, hot):
+        rg, assign = region_grid(rows, cols, k, seed=seed)
+        cp = RegionalControlPlane(
+            rg, regions=rows * cols, region_of=assign, fanout=2,
+            seed=seed, micro_batch=16, chain_k=ck,
+            policy=FairSharePolicy(slack=0.4), method=method,
+        )
+        cp.register_tenant("gold", weight=3.0)
+        cp.register_tenant("bronze", weight=1.0)
+        if hot:
+            (e,) = cp._cut_by_pair[(0, 1)]
+            u, v = e
+            b = cp.cut_residual[e] - 0.25  # leave less than any breq below
+            cp.submit("bronze", DataflowPath.make([0.01, 0.01], [b], u, v))
+            cp.pump()
+            assert cp.cut_residual[e] < 0.3, "hotspot setup failed"
+        base = cp.conservation()["active"]
+        rng = np.random.default_rng(seed + 1)
+        for i in range(n_requests):
+            tenant = "gold" if i % 2 == 0 else "bronze"
+            src = int(rng.choice(np.nonzero(assign == 0)[0]))
+            dst = int(rng.choice(np.nonzero(assign == 2)[0]))
+            p = int(rng.integers(3, 6))
+            creq = rng.uniform(0.02, 0.12, p).astype(np.float32)
+            creq[0] = creq[-1] = 0.0
+            breq = rng.uniform(0.4, 1.0, p - 1).astype(np.float32)
+            cp.submit(tenant, DataflowPath(creq, breq, src, dst))
+        for _ in range(pumps):
+            cp.pump()
+        cp.check_invariants()
+        led = cp.conservation()
+        return {
+            "chain_k": ck, "hotspot": hot,
+            "admitted_fraction": (led["active"] - base) / n_requests,
+            "ledger": led,
+            "spanning": dict(cp.span_stats),
+            "twopc_messages": cp.engine_stats().twopc_messages,
+            "max_cut_attempts": cp.max_cut_attempts,
+        }
+
+    uniform = _drive(chain_k, hot=False)
+    hot_single = _drive(1, hot=True)
+    hot_k = _drive(chain_k, hot=True)
+    # racing never widens the probe budget: the per-candidate message
+    # bound is the SAME max_cut_attempts quota the single-chain broker
+    # had (<= chain_k x that quota by construction, 1x in fact)
+    max_chain = max(hot_k["spanning"]["max_chain"], 2)
+    budget_ok = hot_k["twopc_messages"] <= (
+        hot_k["spanning"]["attempts"] * chain_k
+        * hot_k["max_cut_attempts"] * (2 * max_chain + 2)
+    )
+    return {
+        "rows": rows, "cols": cols, "k": k, "chain_k": chain_k,
+        "requests": n_requests, "pumps": pumps,
+        "uniform": uniform,
+        "hot_single_chain": hot_single,
+        "hot_k_chain": hot_k,
+        "hotspot_admitted_gap": abs(
+            hot_k["admitted_fraction"] - uniform["admitted_fraction"]),
+        "message_budget_bounded": bool(budget_ok),
+    }
+
+
 def run_regional(
     n: int = 24,
     p: int = 4,
@@ -325,12 +416,14 @@ def run_regional(
         for x in points if x["R"] > 1
     )
     multi_hop = run_multi_hop(method=method)
+    hotspot = run_multi_hop_hotspot(method=method)
     record = {
         "n": n, "p": p, "n_per_tenant": n_per_tenant, "pumps": pumps,
         "seed": seed, "method": method, "weights": {"gold": 3.0, "bronze": 1.0},
         "centralized": central,
         "sweep": points,
         "multi_hop": multi_hop,
+        "multi_hop_hotspot": hotspot,
         "criterion": {
             "gate_point": {"R": gate["R"], "fanout": gate["fanout"]},
             "r4_fairness_within_15pct_of_centralized": bool(
@@ -363,7 +456,26 @@ def run_regional(
                 and multi_hop["spanning"]["max_chain"] >= 3
             ),
             "multi_hop_admitted_fraction": multi_hop["admitted_fraction"],
+            # gateway-hotspot gates: the k-chain racer recovers the
+            # uniform-load admission rate (within 0.1) where the legacy
+            # single-chain broker collapses, without widening the 2PC
+            # candidate budget past k x the single-chain quota
+            "multi_hop_hotspot_admitted": bool(
+                hotspot["hotspot_admitted_gap"] <= 0.1
+                and hotspot["hot_single_chain"]["admitted_fraction"]
+                <= hotspot["uniform"]["admitted_fraction"] - 0.3
+                and hotspot["hot_k_chain"]["spanning"]["rerouted"] >= 1
+            ),
+            "hotspot_uniform_fraction": (
+                hotspot["uniform"]["admitted_fraction"]),
+            "hotspot_single_chain_fraction": (
+                hotspot["hot_single_chain"]["admitted_fraction"]),
+            "hotspot_k_chain_fraction": (
+                hotspot["hot_k_chain"]["admitted_fraction"]),
+            "hotspot_message_budget_bounded": (
+                hotspot["message_budget_bounded"]),
             "r1_bit_identity": "enforced in tests/test_regions.py",
+            "k1_bit_identity": "enforced in tests/test_regions.py",
         },
     }
     if out_path is not None:
@@ -389,6 +501,10 @@ if __name__ == "__main__":
     print(json.dumps(
         {"regional": {k: rec[k] for k in ("centralized", "criterion")},
          "multi_hop": rec["multi_hop"],
+         "multi_hop_hotspot": {
+             k: rec["multi_hop_hotspot"][k]
+             for k in ("hotspot_admitted_gap", "message_budget_bounded")
+         },
          "sweep": [
              {"solve_n": x["solve_size"]["mean_solve_n"],
               **{k: x[k] for k in ("R", "fanout", "max_deviation",

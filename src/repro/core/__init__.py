@@ -58,6 +58,7 @@ from .topology import (  # noqa: F401
     barabasi_albert,
     paper_example,
     random_dataflow,
+    region_grid,
     region_line,
     region_tree,
     waxman,

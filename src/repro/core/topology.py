@@ -147,6 +147,63 @@ def region_line(
     return ResourceGraph(cap, bw, lat), assign
 
 
+def region_grid(
+    rows: int,
+    cols: int,
+    k: int = 4,
+    *,
+    cap_range=(2.0, 10.0),
+    bw_range=(10.0, 100.0),
+    lat_intra: float = 1.0,
+    lat_inter: float = 5.0,
+    seed: int = 0,
+) -> tuple[ResourceGraph, np.ndarray]:
+    """A ``rows x cols`` grid of fully-connected ``k``-node regions.
+
+    Regions are numbered row-major (region ``i * cols + j`` sits at grid
+    cell ``(i, j)``); horizontally and vertically adjacent regions are
+    joined by one inter-region link each.  Unlike :func:`region_line`,
+    whose quotient graph is a single path, the grid's quotient graph has
+    *distinct* region chains between most pairs — the topology k-shortest
+    multi-chain routing needs: when the fewest-hop chain runs through a
+    saturated region, a longer bypass chain exists around it.
+
+    Gateway node indices rotate per direction (east uses node ``k-1`` ->
+    ``0``, south uses ``k-2`` -> ``1``, mod ``k``) so a region's cuts do
+    not all share one node where ``k`` allows.  Returns ``(graph,
+    assign)`` with ``assign`` the canonical node -> region map.
+    """
+    assert rows >= 1 and cols >= 1 and k >= 1
+    rng = np.random.default_rng(seed)
+    R = rows * cols
+    n = R * k
+    cap = rng.uniform(*cap_range, size=n).astype(np.float32)
+    bw = np.zeros((n, n), np.float32)
+    lat = np.full((n, n), INF, np.float32)
+    np.fill_diagonal(lat, 0.0)
+
+    def _link(u, v, l):
+        b = float(rng.uniform(*bw_range))
+        bw[u, v] = bw[v, u] = b
+        lat[u, v] = lat[v, u] = l
+
+    for r in range(R):
+        base = r * k
+        for i in range(k):
+            for j in range(i + 1, k):
+                _link(base + i, base + j, lat_intra)
+    for i in range(rows):
+        for j in range(cols):
+            base = (i * cols + j) * k
+            if j + 1 < cols:  # east
+                _link(base + (k - 1), (i * cols + j + 1) * k, lat_inter)
+            if i + 1 < rows:  # south
+                _link(base + (k - 2) % k,
+                      ((i + 1) * cols + j) * k + (1 % k), lat_inter)
+    assign = np.repeat(np.arange(R, dtype=np.int64), k)
+    return ResourceGraph(cap, bw, lat), assign
+
+
 def region_tree(
     levels: int,
     branching: int,

@@ -262,11 +262,12 @@ def absorb_gossip_stats(reg: MetricsRegistry, gs: dict, **labels
 
 def absorb_span_stats(reg: MetricsRegistry, ss: dict, **labels
                       ) -> MetricsRegistry:
-    """Broker ``span_stats`` dict -> registry (max_chain is a gauge,
-    the rest are counters)."""
+    """Broker ``span_stats`` dict -> registry (``max_*`` keys — running
+    maxima like max_chain / max_req_attempts — are gauges, the rest are
+    counters)."""
     for k, v in ss.items():
-        if k == "max_chain":
-            reg.gauge("twopc.max_chain", float(v), **labels)
+        if k.startswith("max_"):
+            reg.gauge(f"twopc.{k}", float(v), **labels)
         else:
             reg.inc(f"twopc.{k}", float(v), **labels)
     return reg

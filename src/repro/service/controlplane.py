@@ -51,7 +51,8 @@ class Request:
     tenant: str
     df: DataflowPath
     klass: int = 0
-    attempts: int = 0
+    attempts: int = 0  # failed placement tries this episode (reset on displace)
+    cum_attempts: int = 0  # lifetime tries + displacements (never reset)
     creq_sum: float = 0.0
 
     def __post_init__(self):

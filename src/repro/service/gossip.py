@@ -48,10 +48,15 @@ class ShareRecord:
     committed: Mapping[str, float]  # tenant -> committed compute in origin
     queued: Mapping[str, float]  # tenant -> queued demand in origin
     residual_cap: float  # summed live residual node capacity
+    # gateway node -> occupancy estimate in [0, 1] for the origin's own
+    # gateways; remote regions fold these into chain costs so spanning
+    # requests steer around hot gateways *before* probing them with a 2PC
+    congestion: Mapping[int, float] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         object.__setattr__(self, "committed", dict(self.committed))
         object.__setattr__(self, "queued", dict(self.queued))
+        object.__setattr__(self, "congestion", dict(self.congestion))
 
 
 class GossipBus:
@@ -89,6 +94,7 @@ class GossipBus:
         committed: Mapping[str, float],
         queued: Mapping[str, float],
         residual_cap: float,
+        congestion: Mapping[int, float] | None = None,
     ) -> ShareRecord:
         """Refresh ``origin``'s own record in its own view (no messages —
         dissemination only happens in :meth:`tick`)."""
@@ -99,6 +105,7 @@ class GossipBus:
             committed=committed,
             queued=queued,
             residual_cap=float(residual_cap),
+            congestion=congestion if congestion is not None else {},
         )
         self.views[origin][origin] = rec
         return rec
@@ -138,9 +145,9 @@ class GossipBus:
     @staticmethod
     def _record_size(rec: ShareRecord) -> int:
         """Scalar fields one :class:`ShareRecord` carries on the wire:
-        origin + version + residual_cap plus one (tenant, value) entry per
-        committed/queued key."""
-        return 3 + len(rec.committed) + len(rec.queued)
+        origin + version + residual_cap plus one (key, value) entry per
+        committed/queued tenant and per congestion gateway."""
+        return 3 + len(rec.committed) + len(rec.queued) + len(rec.congestion)
 
     def gossip_stats(self) -> dict:
         """Message/payload accounting for the bus's lifetime.  A flat
@@ -206,6 +213,22 @@ class GossipBus:
                 continue
             for t, c in rec.queued.items():
                 out[t] = out.get(t, 0.0) + float(c)
+        return out
+
+    def congestion_view(self, region: int) -> dict[int, float]:
+        """Region ``region``'s belief about gateway occupancy across the
+        plane: gateway node -> occupancy in [0, 1], folded from the
+        freshest record heard per origin (including its own).  Each origin
+        publishes only its own gateways, so keys are disjoint in practice;
+        on overlap the max (most pessimistic) estimate wins.  Like every
+        gossiped quantity this is advisory: chain *ranking* may use it,
+        capacity admission never does."""
+        out: dict[int, float] = {}
+        for rec in self.views[region].values():
+            for node, occ in rec.congestion.items():
+                occ = float(occ)
+                if occ > out.get(node, -1.0):
+                    out[node] = occ
         return out
 
     def staleness(self, region: int) -> dict[int, int]:

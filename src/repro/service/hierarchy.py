@@ -147,6 +147,9 @@ class HierarchicalControlPlane(ChainBroker):
         fanout: int = 2,
         gossip_period: int = 1,
         max_cut_attempts: int = 4,
+        chain_k: int = 2,
+        congestion_weight: float = 1.0,
+        max_cum_attempts: Optional[int] = None,
         seed: int = 0,
         tracer=None,
         **solve_cfg,
@@ -167,6 +170,15 @@ class HierarchicalControlPlane(ChainBroker):
         self.micro_batch = int(micro_batch)
         self.max_attempts = int(max_attempts)
         self.max_cut_attempts = int(max_cut_attempts)
+        # same routing/backoff knobs at every level of the tree: the
+        # recursive spanning decomposition races congestion-priced chains
+        # with the same k and weight wherever a segment lands
+        self.chain_k = max(1, int(chain_k))
+        self.congestion_weight = float(congestion_weight)
+        self.max_cum_attempts = (
+            4 * self.max_attempts if max_cum_attempts is None
+            else int(max_cum_attempts)
+        )
         self.gossip_period = max(1, int(gossip_period))
         self.method = method
         self.node_up = np.ones(rg.n, bool)
@@ -176,6 +188,8 @@ class HierarchicalControlPlane(ChainBroker):
             preempt_budget=preempt_budget, pipeline_depth=pipeline_depth,
             method=method, use_kernel=use_kernel, fanout=fanout,
             gossip_period=gossip_period, max_cut_attempts=max_cut_attempts,
+            chain_k=chain_k, congestion_weight=congestion_weight,
+            max_cum_attempts=max_cum_attempts,
             **solve_cfg,
         )
 
@@ -272,6 +286,8 @@ class HierarchicalControlPlane(ChainBroker):
         self.span_stats = {
             "attempts": 0, "admitted": 0, "dropped": 0,
             "displaced": 0, "no_cut": 0, "multi_hop": 0, "max_chain": 0,
+            "broker_local": 0, "rerouted": 0, "livelock_dropped": 0,
+            "max_req_attempts": 0,
         }
 
     # -- registration / submission ------------------------------------------
@@ -384,6 +400,25 @@ class HierarchicalControlPlane(ChainBroker):
 
     # -- gossip (tree-structured) --------------------------------------------
 
+    def node_occupancy(self, v: int) -> float:
+        """Compute occupancy of node ``v`` (this plane's id space) in
+        [0, 1]: recurses down the tree to the leaf region placer that
+        holds the node's live residual."""
+        g = int(self.group_of[v])
+        return self.children[g].node_occupancy(
+            int(self.views[g].to_local(v)))
+
+    def _gateway_occupancy(self, g: int) -> dict[int, float]:
+        """Occupancy of child ``g``'s gateway nodes at THIS level's cuts
+        (this plane's ids) — the per-cut congestion estimate the tree
+        gossip disseminates among siblings, read from the child's leaf
+        placers, regardless of how many levels it hides."""
+        view = self.views[g]
+        return {
+            u: self.children[g].node_occupancy(int(view.to_local(u)))
+            for u in self._gateways_of.get(g, ())
+        }
+
     def _publish(self, g: int) -> None:
         """Publish child g's AGGREGATED accounting into this level's bus:
         one record per child, regardless of how many leaves it hides."""
@@ -392,7 +427,8 @@ class HierarchicalControlPlane(ChainBroker):
         for t, dq in self._span_q[g].items():
             queued[t] = queued.get(t, 0.0) + sum(x.creq_sum for x in dq)
         self.bus.publish(
-            g, child.committed_capacity(), queued, child.residual_capacity()
+            g, child.committed_capacity(), queued, child.residual_capacity(),
+            congestion=self._gateway_occupancy(g),
         )
 
     # -- admission -----------------------------------------------------------
@@ -461,10 +497,8 @@ class HierarchicalControlPlane(ChainBroker):
                 q.popleft()
             for req in picked:
                 q = queues[req.tenant]
-                self.span_stats["attempts"] += 1
                 st = self._try_place_spanning(req)
                 if st is not None:
-                    self.span_stats["admitted"] += 1
                     self.span_tenants[req.tenant].admitted += 1
                     if self.tracer.enabled:
                         self.tracer.flow_point(
@@ -472,13 +506,21 @@ class HierarchicalControlPlane(ChainBroker):
                     out.append(st)
                 else:
                     req.attempts += 1
-                    if req.attempts >= self.max_attempts:
+                    req.cum_attempts += 1
+                    self.span_stats["max_req_attempts"] = max(
+                        self.span_stats["max_req_attempts"], req.cum_attempts)
+                    exhausted = req.attempts >= self.max_attempts
+                    livelocked = req.cum_attempts >= self.max_cum_attempts
+                    if exhausted or livelocked:
                         self.span_tenants[req.tenant].dropped += 1
                         self.span_stats["dropped"] += 1
+                        if livelocked and not exhausted:
+                            self.span_stats["livelock_dropped"] += 1
                         if self.tracer.enabled:
                             self.tracer.flow_end(
                                 req.rid, "drop", outcome="dropped",
                                 attempts=req.attempts,
+                                cum_attempts=req.cum_attempts,
                             )
                         if self.on_drop is not None:
                             self.on_drop(req.rid)
@@ -550,6 +592,7 @@ class HierarchicalControlPlane(ChainBroker):
         self._span_active[req.rid] = st
         for part in parts:
             self._part_of[(part.region, part.tid)] = req.rid
+        self.span_stats["admitted"] += 1
         if len(chain) >= 3:
             self.span_stats["multi_hop"] += 1
         self.span_stats["max_chain"] = max(
@@ -557,20 +600,44 @@ class HierarchicalControlPlane(ChainBroker):
         return st
 
     def _try_place_spanning(self, req: Request) -> Optional[SpanningTicket]:
+        """Chain selection + recursive 2PC — the single accounting site
+        for this level's spanning attempts/admissions, mirroring
+        :meth:`RegionalControlPlane._try_place_spanning`: ``chain_k == 1``
+        takes the legacy fewest-hop chain; ``chain_k > 1`` races Yen
+        k-shortest chains under the load-aware cost fed by this level's
+        sibling gossip, within the same ``max_cut_attempts`` budget."""
         df = req.df
+        self.span_stats["attempts"] += 1
         ga = int(self.group_of[df.src])
         gb = int(self.group_of[df.dst])
-        chain = self._region_chain(ga, gb)
-        if chain is None:
+        if self.chain_k <= 1:
+            chain = self._region_chain(ga, gb)
+            if chain is None:
+                self.span_stats["no_cut"] += 1
+                return None
+            candidates = self._candidate_chains(df, chain)
+            if not candidates:
+                self.span_stats["no_cut"] += 1
+                return None
+            for (splits, gates) in candidates:
+                st = self._attempt_candidate(req, chain, splits, gates)
+                if st is not None:
+                    return st
+            return None
+        occ = self.bus.congestion_view(ga)
+        chains = self._region_chains(ga, gb, occ)
+        if not chains:
             self.span_stats["no_cut"] += 1
             return None
-        candidates = self._candidate_chains(df, chain)
-        if not candidates:
+        raced = self._race_candidates(df, chains, occ)
+        if not raced:
             self.span_stats["no_cut"] += 1
             return None
-        for (splits, gates) in candidates:
+        for (chain, splits, gates) in raced:
             st = self._attempt_candidate(req, chain, splits, gates)
             if st is not None:
+                if chain != self._region_chain(ga, gb):
+                    self.span_stats["rerouted"] += 1
                 return st
         return None
 
@@ -591,6 +658,7 @@ class HierarchicalControlPlane(ChainBroker):
             crid = self.children[ga].broker_admit(tenant, lseg, klass=klass)
             if crid is None:
                 return None
+            self.span_stats["broker_local"] += 1
             span = SpanningTicket(
                 rid=rid, req=req,
                 parts=[SpanPart(ga, crid, lseg, self.views[ga].version)],
@@ -599,11 +667,9 @@ class HierarchicalControlPlane(ChainBroker):
             self._span_active[rid] = span
             self._part_of[(ga, crid)] = rid
         else:
-            self.span_stats["attempts"] += 1
             span = self._try_place_spanning(req)
             if span is None:
                 return None
-            self.span_stats["admitted"] += 1
         st.submitted += 1
         st.admitted += 1
         self._broker_held.add(rid)
@@ -658,19 +724,16 @@ class HierarchicalControlPlane(ChainBroker):
 
     def _drop_or_requeue(self, rid: int, st: SpanningTicket) -> bool:
         """After a displacement teardown: hand a parent-held reservation
-        up, or requeue an owned request at its home group.  Returns True
-        when the request was requeued locally."""
+        up, or requeue an owned request at its home group (dropping it if
+        its cumulative attempt budget is spent — the livelock backstop).
+        Returns True when the request stays owned by this level."""
         if rid in self._broker_held:
             self._broker_held.discard(rid)
             self.span_tenants[st.tenant].released += 1
             if self.on_broker_displace is not None:
                 self.on_broker_displace(rid)
             return False
-        st.req.attempts = 0
-        home = int(self.group_of[st.df.src])
-        ControlPlane._enqueue(
-            self._span_q[home][st.tenant], st.req, front_of_class=True
-        )
+        self._requeue_or_livelock_drop(st)
         return True
 
     def _child_displaced(self, g: int, crid: int) -> None:
@@ -716,13 +779,11 @@ class HierarchicalControlPlane(ChainBroker):
                 if self.on_broker_displace is not None:
                     self.on_broker_displace(rid)
                 continue
-            st.req.attempts = 0
             displaced.append(st)
+        # back-to-front so the batch keeps FIFO-within-class order in any
+        # shared home queue (a cumulative-budget drop leaves its slot empty)
         for st in reversed(displaced):
-            home = int(self.group_of[st.df.src])
-            ControlPlane._enqueue(
-                self._span_q[home][st.tenant], st.req, front_of_class=True
-            )
+            self._requeue_or_livelock_drop(st)
         return displaced
 
     # -- release / churn ------------------------------------------------------
@@ -1004,6 +1065,19 @@ class HierarchicalControlPlane(ChainBroker):
             child.check_invariants()
         led = self.conservation()
         assert led["ok"], f"hierarchical ticket conservation violated: {led}"
+        # span accounting: single-sited attempts/admitted counters nest
+        # strictly (mirrors RegionalControlPlane.check_invariants)
+        ss = self.span_stats
+        assert 0 <= ss["admitted"] <= ss["attempts"], (
+            f"span accounting violated: {ss}")
+        assert ss["multi_hop"] <= ss["admitted"], (
+            f"span accounting violated: {ss}")
+        assert ss["rerouted"] <= ss["admitted"], (
+            f"span accounting violated: {ss}")
+        assert ss["livelock_dropped"] <= ss["dropped"] <= ss["attempts"], (
+            f"span accounting violated: {ss}")
+        assert len(self._span_active) <= ss["admitted"] + ss["broker_local"], (
+            f"more active spans than admissions: {ss}")
         reserved = {e: 0.0 for e in self.cut_base}
         for st in self._span_active.values():
             for e, b in zip(st.cuts, st.cut_bws):

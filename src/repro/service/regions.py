@@ -344,6 +344,9 @@ class ChainBroker:
     region_of: np.ndarray
     node_up: np.ndarray
     max_cut_attempts: int
+    chain_k: int
+    congestion_weight: float
+    max_cum_attempts: int
 
     def _init_cut_ledger(self) -> None:
         """Build the cut-edge bandwidth ledger: cut links belong to no
@@ -353,6 +356,7 @@ class ChainBroker:
         self.cut_residual: dict[tuple[int, int], float] = {}
         self.cut_link_up: dict[tuple[int, int], bool] = {}
         self._cut_by_pair: dict[tuple[int, int], list[tuple[int, int]]] = {}
+        self._gateways_of: dict[int, list[int]] = {}
         for (u, v) in cut_edges(self.base, self.region_of):
             self.cut_base[(u, v)] = float(self.base.bw[u, v])
             self.cut_residual[(u, v)] = float(self.base.bw[u, v])
@@ -360,6 +364,11 @@ class ChainBroker:
             self._cut_by_pair.setdefault(
                 (int(self.region_of[u]), int(self.region_of[v])), []
             ).append((u, v))
+            gws = self._gateways_of.setdefault(int(self.region_of[u]), [])
+            if u not in gws:
+                gws.append(u)
+        for gws in self._gateways_of.values():
+            gws.sort()
 
     def _cut_alive(self, u: int, v: int) -> bool:
         return (
@@ -402,6 +411,168 @@ class ChainBroker:
                     heapq.heappush(heap, (*cand, path + (nb,)))
         return None
 
+    # -- congestion-aware k-shortest chains -----------------------------------
+
+    def _edge_congestion(self, e: tuple[int, int],
+                         occ_view: dict[int, float]) -> float:
+        """Congestion estimate for one cut edge: this broker's own ledger
+        utilization of the cut, plus the gossiped occupancy of both
+        gateway endpoints.  The ledger term is exact (2PC-maintained);
+        the occupancy terms may be arbitrarily stale — they only ever
+        rank chains, never admit over capacity."""
+        base = self.cut_base[e]
+        util = 1.0 - self.cut_residual[e] / base if base > 0 else 0.0
+        u, v = e
+        return max(0.0, util) + occ_view.get(u, 0.0) + occ_view.get(v, 0.0)
+
+    def _edge_cost(self, e: tuple[int, int],
+                   occ_view: dict[int, float]) -> float:
+        """Load-aware chain metric: ``lat * (1 + w * congestion)``.  With
+        ``congestion_weight == 0`` this degenerates to pure latency."""
+        lat = float(self.base.lat[e])
+        w = self.congestion_weight
+        if w <= 0.0:
+            return lat
+        return lat * (1.0 + w * self._edge_congestion(e, occ_view))
+
+    def _cost_adjacency(
+        self, occ_view: dict[int, float]
+    ) -> dict[int, dict[int, float]]:
+        """Quotient graph under the load-aware metric: ``adj[r1][r2]`` =
+        min :meth:`_edge_cost` among alive (r1 -> r2) cuts."""
+        adj: dict[int, dict[int, float]] = {}
+        for (r1, r2), edges in self._cut_by_pair.items():
+            costs = [
+                self._edge_cost(e, occ_view)
+                for e in edges if self._cut_alive(*e)
+            ]
+            if costs:
+                adj.setdefault(r1, {})[r2] = min(costs)
+        return adj
+
+    @staticmethod
+    def _dijkstra_chain(adj, ra: int, rb: int, banned_nodes=(),
+                        banned_edges=()) -> Optional[tuple[float, list[int]]]:
+        """Deterministic least-cost loopless path ``ra -> rb`` over a cost
+        adjacency (ties by hops then child ids).  ``banned_nodes`` /
+        ``banned_edges`` support Yen spur searches."""
+        banned_nodes = set(banned_nodes)
+        banned_edges = set(banned_edges)
+        best: dict[int, tuple[float, int]] = {ra: (0.0, 0)}
+        heap: list[tuple[float, int, tuple[int, ...]]] = [(0.0, 0, (ra,))]
+        while heap:
+            cost, hops, path = heapq.heappop(heap)
+            r = path[-1]
+            if r == rb:
+                return cost, list(path)
+            if (cost, hops) > best.get(r, (cost, hops)):
+                continue  # stale heap entry
+            for nb in sorted(adj.get(r, {})):
+                if nb in path or nb in banned_nodes or (r, nb) in banned_edges:
+                    continue
+                cand = (cost + adj[r][nb], hops + 1)
+                if nb not in best or cand < best[nb]:
+                    best[nb] = cand
+                    heapq.heappush(heap, (*cand, path + (nb,)))
+        return None
+
+    def _region_chains(self, ra: int, rb: int,
+                       occ_view: dict[int, float]) -> list[list[int]]:
+        """Up to ``chain_k`` loopless region chains ``ra -> rb`` by Yen's
+        algorithm under the load-aware edge cost, cheapest first.  Chains
+        through hot gateways cost more, so a saturated fewest-hop chain
+        sorts behind a longer cold bypass *before* any 2PC probes it.
+        ``chain_k == 1`` planes never call this — they take the legacy
+        fewest-hop :meth:`_region_chain` path unchanged."""
+        adj = self._cost_adjacency(occ_view)
+        first = self._dijkstra_chain(adj, ra, rb)
+        if first is None:
+            return []
+        found: list[tuple[float, list[int]]] = [first]
+        seen = {tuple(first[1])}
+        frontier: list[tuple[float, int, tuple[int, ...]]] = []
+        while len(found) < self.chain_k:
+            _, prev = found[-1]
+            for i in range(len(prev) - 1):
+                root = prev[:i + 1]
+                spur_bans = {
+                    (p[i], p[i + 1]) for _, p in found
+                    if len(p) > i + 1 and p[:i + 1] == root
+                }
+                spur = self._dijkstra_chain(
+                    adj, root[-1], rb, banned_nodes=root[:-1],
+                    banned_edges=spur_bans,
+                )
+                if spur is None:
+                    continue
+                scost, spath = spur
+                rcost = sum(adj[root[j]][root[j + 1]] for j in range(i))
+                path = tuple(root[:-1] + spath)
+                if path not in seen:
+                    seen.add(path)
+                    heapq.heappush(
+                        frontier, (rcost + scost, len(path) - 1, path))
+            if not frontier:
+                break
+            cost, _, path = heapq.heappop(frontier)
+            found.append((cost, list(path)))
+        return [p for _, p in found]
+
+    def _race_candidates(self, df: DataflowPath, chains: list[list[int]],
+                         occ_view: dict[int, float]) -> list:
+        """Round-robin interleave of ``(chain, splits, gates)`` candidates
+        across the k chains, cheapest chain first, with gates per hop
+        ordered by the same load-aware cost.  The total is capped at
+        ``max_cut_attempts`` — racing chains never widens the 2PC probe
+        budget beyond the single-chain broker's."""
+        budget = self.max_cut_attempts
+
+        def key(e):
+            return (self._edge_cost(e, occ_view), float(self.base.lat[e]), e)
+
+        per = [
+            collections.deque(
+                self._candidate_chains(df, ch, limit=budget, edge_key=key))
+            for ch in chains
+        ]
+        out = []
+        while len(out) < budget and any(per):
+            for ch, dq in zip(chains, per):
+                if dq:
+                    splits, gates = dq.popleft()
+                    out.append((ch, splits, gates))
+                    if len(out) >= budget:
+                        break
+        return out
+
+    def _requeue_or_livelock_drop(self, st: SpanningTicket) -> None:
+        """Requeue a displaced spanning request at its home child — or
+        drop it when its *cumulative* attempt budget is spent.  The
+        per-episode ``attempts`` resets (displacement is not the
+        request's fault) but ``cum_attempts`` never does: a request
+        ping-ponging between a saturated chain and displacement meets
+        ``max_cum_attempts`` instead of livelocking forever."""
+        st.req.attempts = 0
+        st.req.cum_attempts += 1
+        self.span_stats["max_req_attempts"] = max(
+            self.span_stats["max_req_attempts"], st.req.cum_attempts)
+        if st.req.cum_attempts >= self.max_cum_attempts:
+            self.span_tenants[st.tenant].dropped += 1
+            self.span_stats["dropped"] += 1
+            self.span_stats["livelock_dropped"] += 1
+            if self.tracer.enabled:
+                self.tracer.flow_end(
+                    st.rid, "drop", outcome="livelock",
+                    cum_attempts=st.req.cum_attempts,
+                )
+            if self.on_drop is not None:
+                self.on_drop(st.rid)
+            return
+        home = int(self.region_of[st.df.src])
+        ControlPlane._enqueue(
+            self._span_q[home][st.tenant], st.req, front_of_class=True
+        )
+
     def _chain_feasible(self, df: DataflowPath, splits, gates) -> bool:
         """Cut-bandwidth screen for one candidate.  Ghost gateway
         endpoints (see :func:`split_dataflow_chain`) remove every
@@ -412,11 +583,15 @@ class ChainBroker:
                 return False
         return True
 
-    def _candidate_chains(self, df: DataflowPath, chain: list[int]) -> list:
-        """Up to ``max_cut_attempts`` (splits, cut-edges) candidates for a
-        child chain: split combinations (non-decreasing — repeats make
-        transit regions) ordered by compute balance across the segments,
-        cut edges per hop by link latency (hop order lexicographic)."""
+    def _candidate_chains(self, df: DataflowPath, chain: list[int], *,
+                          limit: Optional[int] = None,
+                          edge_key=None) -> list:
+        """Up to ``limit`` (default ``max_cut_attempts``) (splits,
+        cut-edges) candidates for a child chain: split combinations
+        (non-decreasing — repeats make transit regions) ordered by compute
+        balance across the segments, cut edges per hop by ``edge_key``
+        (default link latency; hop order lexicographic)."""
+        limit = self.max_cut_attempts if limit is None else max(1, int(limit))
         m = len(chain) - 1
         p = df.p
         edge_lists = []
@@ -427,7 +602,8 @@ class ChainBroker:
             ]
             if not edges:
                 return []
-            edges.sort(key=lambda e: float(self.base.lat[e]))
+            edges.sort(key=edge_key if edge_key is not None
+                       else lambda e: float(self.base.lat[e]))
             edge_lists.append(edges)
         prefix = np.concatenate([[0.0], np.cumsum(df.creq.astype(np.float64))])
         target = float(prefix[-1]) / (m + 1)
@@ -470,7 +646,7 @@ class ChainBroker:
                 if not self._chain_feasible(df, splits, gates):
                     continue
                 out.append((splits, gates))
-                if len(out) >= self.max_cut_attempts:
+                if len(out) >= limit:
                     return out
         return out
 
@@ -510,6 +686,9 @@ class RegionalControlPlane(ChainBroker):
         fanout: int = 2,
         gossip_period: int = 1,
         max_cut_attempts: int = 4,
+        chain_k: int = 2,
+        congestion_weight: float = 1.0,
+        max_cum_attempts: Optional[int] = None,
         seed: int = 0,
         tracer=None,
         **solve_cfg,
@@ -553,6 +732,18 @@ class RegionalControlPlane(ChainBroker):
         self.pipeline_depth = max(1, int(pipeline_depth))
         self.method = method
         self.max_cut_attempts = int(max_cut_attempts)
+        # chain_k > 1 races k-shortest region chains under the load-aware
+        # cost; chain_k == 1 is the legacy single fewest-hop chain,
+        # bit-identical by construction (same code path)
+        self.chain_k = max(1, int(chain_k))
+        self.congestion_weight = float(congestion_weight)
+        # lifetime attempt budget across displacement episodes: a request
+        # ping-ponging between admission and displacement resets its
+        # per-episode attempts but never this one (livelock backstop)
+        self.max_cum_attempts = (
+            4 * self.max_attempts if max_cum_attempts is None
+            else int(max_cum_attempts)
+        )
         # the broker's tracer; each region gets a scoped view sharing the
         # same event buffer ("r{r}/" track prefixes, so region-local rids
         # never collide with broker-level flow ids)
@@ -631,6 +822,10 @@ class RegionalControlPlane(ChainBroker):
             "displaced": 0, "no_cut": 0,
             "multi_hop": 0,  # admitted over chains of >= 3 regions
             "max_chain": 0,  # longest admitted region chain
+            "broker_local": 0,  # parent-held single-region reservations
+            "rerouted": 0,  # admitted via a non-fewest-hop chain
+            "livelock_dropped": 0,  # dropped by the cumulative budget
+            "max_req_attempts": 0,  # highest lifetime attempts on one req
         }
 
     # -- registration / submission ------------------------------------------
@@ -773,6 +968,25 @@ class RegionalControlPlane(ChainBroker):
 
     # -- gossip --------------------------------------------------------------
 
+    def node_occupancy(self, v: int) -> float:
+        """Compute occupancy of global node ``v`` in [0, 1] from its
+        owning region's live residual (1.0 when the node is down)."""
+        r = int(self.region_of[v])
+        cp = self.regions[r]
+        lv = int(self.views[r].to_local(v))
+        if not (bool(self.node_up[v]) and bool(cp.placer.node_up[lv])):
+            return 1.0
+        base = float(cp.placer.base.cap[lv])
+        if base <= 0.0:
+            return 0.0
+        return min(1.0, max(0.0, 1.0 - float(cp.placer.cap[lv]) / base))
+
+    def _gateway_occupancy(self, r: int) -> dict[int, float]:
+        """Occupancy of region ``r``'s own gateway nodes (global ids) —
+        the per-cut congestion estimate it publishes into gossip."""
+        return {u: self.node_occupancy(u)
+                for u in self._gateways_of.get(r, ())}
+
     def _publish(self, r: int) -> None:
         cp = self.regions[r]
         queued = cp.queued_demand()
@@ -781,7 +995,8 @@ class RegionalControlPlane(ChainBroker):
         residual = float(
             np.sum(np.where(cp.placer.node_up, cp.placer.cap, 0.0))
         )
-        self.bus.publish(r, self._region_committed(r), queued, residual)
+        self.bus.publish(r, self._region_committed(r), queued, residual,
+                         congestion=self._gateway_occupancy(r))
 
     # -- admission -----------------------------------------------------------
 
@@ -879,10 +1094,8 @@ class RegionalControlPlane(ChainBroker):
                 q.popleft()
             for req in picked:
                 q = queues[req.tenant]
-                self.span_stats["attempts"] += 1
                 st = self._try_place_spanning(req)
                 if st is not None:
-                    self.span_stats["admitted"] += 1
                     self.span_tenants[req.tenant].admitted += 1
                     if self.tracer.enabled:
                         self.tracer.flow_point(
@@ -890,13 +1103,21 @@ class RegionalControlPlane(ChainBroker):
                     out.append(st)
                 else:
                     req.attempts += 1
-                    if req.attempts >= self.max_attempts:
+                    req.cum_attempts += 1
+                    self.span_stats["max_req_attempts"] = max(
+                        self.span_stats["max_req_attempts"], req.cum_attempts)
+                    exhausted = req.attempts >= self.max_attempts
+                    livelocked = req.cum_attempts >= self.max_cum_attempts
+                    if exhausted or livelocked:
                         self.span_tenants[req.tenant].dropped += 1
                         self.span_stats["dropped"] += 1
+                        if livelocked and not exhausted:
+                            self.span_stats["livelock_dropped"] += 1
                         if self.tracer.enabled:
                             self.tracer.flow_end(
                                 req.rid, "drop", outcome="dropped",
                                 attempts=req.attempts,
+                                cum_attempts=req.cum_attempts,
                             )
                         if self.on_drop is not None:
                             self.on_drop(req.rid)
@@ -928,6 +1149,7 @@ class RegionalControlPlane(ChainBroker):
             t = self._reserve_plain(ra, df, tenant, klass)
             if t is None:
                 return None
+            self.span_stats["broker_local"] += 1
             span = SpanningTicket(
                 rid=rid, req=req,
                 parts=[SpanPart(ra, t.tid, t.df, self.views[ra].version)],
@@ -936,11 +1158,9 @@ class RegionalControlPlane(ChainBroker):
             self._span_active[rid] = span
             self._part_of[(ra, t.tid)] = rid
         else:
-            self.span_stats["attempts"] += 1
             span = self._try_place_spanning(req)
             if span is None:
                 return None
-            self.span_stats["admitted"] += 1
         st.submitted += 1
         st.admitted += 1
         self._broker_held.add(rid)
@@ -1038,6 +1258,7 @@ class RegionalControlPlane(ChainBroker):
         self._span_active[req.rid] = st
         for part in parts:
             self._part_of[(part.region, part.tid)] = req.rid
+        self.span_stats["admitted"] += 1
         if len(chain) >= 3:
             self.span_stats["multi_hop"] += 1
         self.span_stats["max_chain"] = max(
@@ -1116,28 +1337,58 @@ class RegionalControlPlane(ChainBroker):
         )
 
     def _try_place_spanning(self, req: Request) -> Optional[SpanningTicket]:
-        """Chain selection + bounded 2PC over the cut candidates.
+        """Chain selection + bounded 2PC over the cut candidates.  This is
+        the single accounting site for spanning placement attempts —
+        ``span_stats["attempts"]`` counts every entry here (from the pump
+        drain AND from a parent plane's ``broker_admit``), ``admitted``
+        every 2PC commit, so ``attempts >= admitted`` holds by
+        construction (see :meth:`check_invariants`).
 
-        The fewest-hop region chain is computed over the quotient graph of
-        regions, so dataflows spanning >= 3 regions — or region pairs with
-        no direct cut edge — decompose into one gateway-pinned segment per
-        region on the chain instead of retrying until dropped."""
+        ``chain_k == 1``: the legacy single fewest-hop region chain over
+        the quotient graph, with latency-ordered gate candidates —
+        dataflows spanning >= 3 regions decompose into one gateway-pinned
+        segment per region instead of retrying until dropped.
+
+        ``chain_k > 1``: Yen k-shortest chains under the load-aware cost
+        (the broker's own cut-ledger utilization + gossiped gateway
+        occupancy), raced round-robin under the same ``max_cut_attempts``
+        2PC budget — when the fewest-hop chain runs hot, a cold bypass
+        chain gets probed before the request burns its whole budget."""
         df = req.df
+        self.span_stats["attempts"] += 1
         ra = int(self.region_of[df.src])
         rb = int(self.region_of[df.dst])
-        chain = self._region_chain(ra, rb)
-        if chain is None:
-            self.span_stats["no_cut"] += 1
-            return None
-        candidates = self._candidate_chains(df, chain)
-        if not candidates:
-            self.span_stats["no_cut"] += 1
-            return None
         can_preempt = self.preempt and req.klass > 0
-        for (splits, gates) in candidates:
+        if self.chain_k <= 1:
+            chain = self._region_chain(ra, rb)
+            if chain is None:
+                self.span_stats["no_cut"] += 1
+                return None
+            candidates = self._candidate_chains(df, chain)
+            if not candidates:
+                self.span_stats["no_cut"] += 1
+                return None
+            for (splits, gates) in candidates:
+                st = self._attempt_candidate(req, chain, splits, gates,
+                                             can_preempt)
+                if st is not None:
+                    return st
+            return None
+        occ = self.bus.congestion_view(ra)
+        chains = self._region_chains(ra, rb, occ)
+        if not chains:
+            self.span_stats["no_cut"] += 1
+            return None
+        raced = self._race_candidates(df, chains, occ)
+        if not raced:
+            self.span_stats["no_cut"] += 1
+            return None
+        for (chain, splits, gates) in raced:
             st = self._attempt_candidate(req, chain, splits, gates,
                                          can_preempt)
             if st is not None:
+                if chain != self._region_chain(ra, rb):
+                    self.span_stats["rerouted"] += 1
                 return st
         return None
 
@@ -1201,11 +1452,7 @@ class RegionalControlPlane(ChainBroker):
             if self.on_broker_displace is not None:
                 self.on_broker_displace(rid)
         else:
-            st.req.attempts = 0
-            home = int(self.region_of[st.df.src])
-            ControlPlane._enqueue(
-                self._span_q[home][st.tenant], st.req, front_of_class=True
-            )
+            self._requeue_or_livelock_drop(st)
         if self._churn_collector is not None:
             self._churn_collector.extend(old_parts)
 
@@ -1256,15 +1503,12 @@ class RegionalControlPlane(ChainBroker):
                 if self.on_broker_displace is not None:
                     self.on_broker_displace(rid)
                 continue
-            st.req.attempts = 0
             displaced.append(st)
         # back-to-front so the batch keeps FIFO-within-class order in any
-        # shared home queue
+        # shared home queue (a cumulative-budget drop simply leaves its
+        # slot empty)
         for st in reversed(displaced):
-            home = int(self.region_of[st.df.src])
-            ControlPlane._enqueue(
-                self._span_q[home][st.tenant], st.req, front_of_class=True
-            )
+            self._requeue_or_livelock_drop(st)
         return old
 
     def _span_uses_node(self, st: SpanningTicket, v: int) -> bool:
@@ -1547,6 +1791,20 @@ class RegionalControlPlane(ChainBroker):
             cp.check_invariants()
         led = self.conservation()
         assert led["ok"], f"global ticket conservation violated: {led}"
+        # span accounting: attempts/admitted are counted at exactly one
+        # site each (_try_place_spanning entry / 2PC commit), so the
+        # counters nest strictly — a double-count on any path breaks this
+        ss = self.span_stats
+        assert 0 <= ss["admitted"] <= ss["attempts"], (
+            f"span accounting violated: {ss}")
+        assert ss["multi_hop"] <= ss["admitted"], (
+            f"span accounting violated: {ss}")
+        assert ss["rerouted"] <= ss["admitted"], (
+            f"span accounting violated: {ss}")
+        assert ss["livelock_dropped"] <= ss["dropped"] <= ss["attempts"], (
+            f"span accounting violated: {ss}")
+        assert len(self._span_active) <= ss["admitted"] + ss["broker_local"], (
+            f"more active spans than admissions: {ss}")
         reserved = {e: 0.0 for e in self.cut_base}
         for st in self._span_active.values():
             for e, b in zip(st.cuts, st.cut_bws):

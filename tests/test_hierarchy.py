@@ -529,3 +529,94 @@ def test_coordination_report_nests():
     assert rep["gossip"]["n_regions"] == 2
     fair = cp.fairness_report()
     assert "coordination" in fair
+
+
+# ---------------------------------------------------------------------------
+# congestion-aware k-chain routing through the tree
+# ---------------------------------------------------------------------------
+
+
+def test_routing_knobs_propagate_down_the_tree():
+    """chain_k / congestion_weight / max_cum_attempts reach every nested
+    plane (and never leak into the solver config)."""
+    rg, assign = region_tree(2, 2, 3, seed=0)
+    cp = ControlPlane(rg, levels=2, region_of=assign, chain_k=3,
+                      congestion_weight=0.5, max_cum_attempts=7, **PYM)
+    planes = [cp]
+    while planes:
+        p = planes.pop()
+        assert p.chain_k == 3
+        assert p.congestion_weight == 0.5
+        assert p.max_cum_attempts == 7
+        planes.extend(getattr(p, "children", []))
+    cp.register_tenant("a")
+    cp.submit("a", _cross_tree_df(rg))
+    cp.pump()
+    cp.check_invariants()
+
+
+def test_top_level_k_chains_exist_on_sibling_mesh():
+    """Top-level siblings are all-to-all, so Yen finds a 2-hop bypass
+    behind every direct chain — the racer has real alternatives at the
+    top of the tree too."""
+    rg, assign, cp = _tree_plane(levels=2, b=3, k=3, chain_k=2)
+    chains = cp._region_chains(0, 1, {})
+    assert chains[0] == [0, 1] and len(chains) == 2
+    assert chains[1] == [0, 2, 1]
+
+
+def test_congestion_published_at_every_level():
+    """Each level's bus carries occupancy estimates for its own gateway
+    nodes (folded recursively out of the children via node_occupancy)."""
+    rg, assign, cp = _tree_plane(levels=2, b=2, k=4, fanout=1)
+    cp.submit("a", _cross_tree_df(rg))
+    cp.pump()
+    view = cp.bus.congestion_view(0)
+    own = cp._gateways_of.get(0, ())
+    assert own and all(u in view for u in own)
+    assert all(0.0 <= view[u] <= 1.0 for u in view)
+    for g in range(cp.B):
+        for u in cp._gateways_of.get(g, ()):
+            assert 0.0 <= cp.node_occupancy(int(u)) <= 1.0
+    # the child planes publish their own (local-id) gateway estimates too
+    child = cp.children[0]
+    crec = child.bus.views[0].get(0)
+    assert crec is not None and isinstance(crec.congestion, dict)
+
+
+def test_hierarchy_cut_fail_restore_keeps_ledger_coherent():
+    """Top-level cut fail/restore under a standing cross-group span: the
+    healed cut reappears with its full residual, double fail/restore is
+    idempotent, and the displaced request is readmitted."""
+    rg, assign, cp = _tree_plane(levels=2, b=2, k=4)
+    rid = cp.submit("a", _cross_tree_df(rg))
+    (st,) = cp.pump()
+    e = st.cuts[0]
+    cp.fail_link(*e)
+    cp.fail_link(*e)  # idempotent
+    cp.check_invariants()
+    assert cp.cut_residual[e] == pytest.approx(cp.cut_base[e])
+    assert all(-1e-6 <= cp.cut_residual[c] <= cp.cut_base[c] + 1e-6
+               for c in cp.cut_base)
+    cp.restore_link(*e)
+    cp.restore_link(*e)  # idempotent
+    assert cp.cut_residual[e] == pytest.approx(cp.cut_base[e])
+    got = cp.pump(rounds=4)
+    assert any(getattr(t, "rid", None) == rid for t in got)
+    cp.check_invariants()
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_hierarchy_k_chain_conservation(seed):
+    """The full fuzz suite with the k-chain racer live at every level of
+    a 3-sibling tree (real bypass chains exist top-level)."""
+    rg, assign = region_tree(2, 3, 4, seed=3)
+    cp = HierarchicalControlPlane(
+        rg, levels=2, region_of=assign, micro_batch=6, max_attempts=3,
+        seed=seed, chain_k=3, policy=FairSharePolicy(slack=0.4), **PYM,
+    )
+    cp.register_tenant("a", weight=3.0)
+    cp.register_tenant("b", weight=1.0)
+    cp.register_tenant("c", weight=2.0, budget=1.5)
+    led = _fuzz_hierarchy(cp, rg, seed)
+    assert led["submitted"] > 0

@@ -904,3 +904,417 @@ def test_candidate_search_bounded_for_long_dataflows():
     (t,) = cp.pump()
     assert t.rid == rid and len(t.chain) == 6
     cp.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# congestion gossip (per-cut gateway occupancy estimates)
+# ---------------------------------------------------------------------------
+
+
+def _grid_plane(rows=2, cols=3, k=3, seed=0, **kw):
+    from repro.core import region_grid
+
+    rg, assign = region_grid(rows, cols, k, seed=seed)
+    cp = RegionalControlPlane(rg, regions=rows * cols, region_of=assign,
+                              seed=seed, **PYM, **kw)
+    cp.register_tenant("a", weight=3.0)
+    cp.register_tenant("b", weight=1.0)
+    cp.register_tenant("c", weight=2.0, budget=2.0)
+    return rg, assign, cp
+
+
+def _saturate_cut(cp, r1, r2, leave=0.2):
+    """Stand a spanning reservation on the single (r1, r2) cut, leaving
+    only ``leave`` residual bandwidth on it."""
+    (e,) = cp._cut_by_pair[(r1, r2)]
+    u, v = e
+    b = cp.cut_residual[e] - leave
+    rid = cp.submit("b", DataflowPath.make([0.01, 0.01], [b], src=u, dst=v))
+    out = cp.pump()
+    assert any(getattr(t, "rid", None) == rid for t in out)
+    assert cp.cut_residual[e] == pytest.approx(leave, abs=1e-3)
+    return e
+
+
+def _saturate_region_compute(cp, r, frac=0.95):
+    """Fill region ``r``'s nodes to ``frac`` occupancy via direct local
+    admissions (bypassing the queues, like the fairness test does)."""
+    rcp = cp.regions[r]
+    for lv in range(rcp.placer.base.cap.shape[0]):
+        take = float(rcp.placer.cap[lv]) - (1.0 - frac) * float(
+            rcp.placer.base.cap[lv])
+        if take > 0:
+            df = DataflowPath.make([take], [], src=lv, dst=lv)
+            assert rcp.placer.admit(df, tenant="b") is not None
+
+
+def test_gossip_carries_congestion_estimates():
+    bus = GossipBus(3, fanout=2, seed=0)  # fanout 2 of 2 peers: full push
+    rec = bus.publish(0, {}, {}, 1.0, congestion={7: 0.5, 9: 0.25})
+    assert rec.congestion == {7: 0.5, 9: 0.25}
+    # the wire-size accounting includes the congestion entries
+    assert GossipBus._record_size(rec) == 3 + 2
+    bus.tick()
+    for r in range(3):
+        assert bus.congestion_view(r)[7] == 0.5
+    # the freshest record per origin wins (no merge across versions)
+    bus.publish(0, {}, {}, 1.0, congestion={7: 0.9})
+    bus.tick()
+    for r in range(3):
+        view = bus.congestion_view(r)
+        assert view[7] == 0.9 and 9 not in view
+    # on key overlap across origins the pessimistic max wins
+    bus.publish(1, {}, {}, 1.0, congestion={7: 0.1})
+    bus.tick()
+    assert bus.congestion_view(2)[7] == 0.9
+
+
+def test_congestion_view_reflects_remote_gateway_heat():
+    """A saturated region's gateway occupancy reaches every other
+    region's congestion view through the existing share gossip — and the
+    load-aware edge cost prices its cuts up accordingly."""
+    rg, assign, cp = _grid_plane(fanout=5)  # full-fanout: 1-round spread
+    _saturate_region_compute(cp, 1)
+    cp.pump()  # publish + tick
+    occ = cp.bus.congestion_view(0)
+    hot = cp._gateways_of[1]
+    assert hot and all(occ.get(u, 0.0) > 0.5 for u in hot)
+    (e,) = cp._cut_by_pair[(0, 1)]
+    assert cp._edge_cost(e, occ) > float(rg.lat[e]) * 1.5
+    cp.check_invariants()
+
+
+def test_zero_fanout_keeps_congestion_estimates_local():
+    rg, assign, cp = _grid_plane(fanout=0)
+    _saturate_region_compute(cp, 1)
+    cp.pump()
+    occ = cp.bus.congestion_view(0)
+    assert occ and all(int(assign[u]) == 0 for u in occ)  # own gateways only
+
+
+# ---------------------------------------------------------------------------
+# congestion-aware k-shortest chain routing
+# ---------------------------------------------------------------------------
+
+
+def test_region_grid_generator_shape():
+    from repro.core import region_grid
+
+    rows, cols, k = 2, 3, 3
+    rg, assign = region_grid(rows, cols, k, seed=0)
+    R = rows * cols
+    assert rg.n == R * k
+    np.testing.assert_array_equal(assign, np.repeat(np.arange(R), k))
+    # fully meshed inside every region
+    for r in range(R):
+        base = r * k
+        for i in range(k):
+            for j in range(i + 1, k):
+                assert rg.bw[base + i, base + j] > 0
+    # the quotient graph is the grid: east + south neighbors only
+    pairs = {
+        (int(assign[u]), int(assign[v]))
+        for (u, v) in rg.edges() if assign[u] != assign[v]
+    }
+    expect = set()
+    for i in range(rows):
+        for j in range(cols):
+            r = i * cols + j
+            if j + 1 < cols:
+                expect |= {(r, r + 1), (r + 1, r)}
+            if i + 1 < rows:
+                expect |= {(r, r + cols), (r + cols, r)}
+    assert pairs == expect
+
+
+def test_yen_chains_distinct_loopless_cheapest_first():
+    rg, assign, cp = _grid_plane(chain_k=4)
+    chains = cp._region_chains(0, 5, {})
+    assert chains[0] == cp._region_chain(0, 5)  # cold: fewest-hop first
+    assert len(chains) == len({tuple(c) for c in chains}) >= 2
+    for c in chains:
+        assert c[0] == 0 and c[-1] == 5 and len(set(c)) == len(c)
+        for r1, r2 in zip(c, c[1:]):  # every hop really is adjacent
+            assert cp._cut_by_pair.get((r1, r2))
+    # chain costs are non-decreasing in rank
+    adj = cp._cost_adjacency({})
+    costs = [sum(adj[a][b] for a, b in zip(c, c[1:])) for c in chains]
+    assert costs == sorted(costs)
+
+
+def test_congestion_reranks_chains_before_any_probe():
+    """Hot gossiped gateways re-rank the fewest-hop chain behind a cold
+    bypass purely in the cost model — before any 2PC probe spends budget.
+    congestion_weight=0 restores pure-latency ranking."""
+    rg, assign, cp = _grid_plane(chain_k=2)
+    hot = {u: 1.0
+           for e in cp._cut_by_pair[(0, 1)] + cp._cut_by_pair[(1, 2)]
+           for u in e}
+    chains = cp._region_chains(0, 2, hot)
+    assert chains[0] == [0, 3, 4, 5, 2]  # cold bypass ranks first
+    assert [0, 1, 2] in chains           # hot fewest-hop still raced
+    assert cp._region_chains(0, 2, {})[0] == [0, 1, 2]  # cold: fewest-hop
+    cp.congestion_weight = 0.0           # weight 0: occupancy is ignored
+    assert cp._region_chains(0, 2, hot)[0] == [0, 1, 2]
+
+
+def test_gateway_hotspot_k_chain_admits_where_single_chain_collapses():
+    """The tentpole regression: stand a reservation on the (0, 1) cut so
+    the fewest-hop chain 0-1-2 has no feasible candidate.  The legacy
+    single-chain broker burns every attempt on that chain and drops the
+    request; the k-chain racer probes the cold bypass 0-3-4-5-2 inside
+    the same 2PC budget and admits."""
+    results = []
+    for chain_k in (1, 2):
+        rg, assign, cp = _grid_plane(chain_k=chain_k, max_attempts=3)
+        hot = _saturate_cut(cp, 0, 1, leave=0.2)
+        dst = int(np.nonzero(assign == 2)[0][-1])
+        df = DataflowPath.make([0.0, 0.2, 0.2, 0.0], [1.0] * 3,
+                               src=0, dst=dst)
+        rid = cp.submit("a", df)
+        out = [t for _ in range(3) for t in cp.pump()]
+        cp.check_invariants()
+        results.append((cp, rid, out, hot))
+    cp1, rid1, out1, _ = results[0]
+    assert out1 == []  # single-chain: never admitted, dropped
+    assert cp1.conservation()["dropped"] == 1
+    assert cp1.span_stats["no_cut"] >= 3
+    cp2, rid2, out2, hot = results[1]
+    (t,) = out2
+    # admitted over a >2-hop bypass that avoids the saturated cut
+    assert t.rid == rid2
+    assert t.chain[0] == 0 and t.chain[-1] == 2 and len(t.chain) == 5
+    assert t.chain != [0, 1, 2] and hot not in t.cuts
+    assert cp2.span_stats["rerouted"] == 1
+    assert cp2.span_stats["multi_hop"] >= 1
+    assert cp2.span_stats["max_chain"] == 5
+    led = cp2.conservation()
+    assert led["ok"] and led["dropped"] == 0
+    # racing stayed inside the documented per-candidate message bound
+    assert cp2.engine_stats().twopc_messages <= (
+        cp2.span_stats["attempts"] * cp2.max_cut_attempts * (2 * 5 + 2))
+
+
+def test_stale_congestion_misroutes_but_never_overcommits():
+    """fanout=0: occupancy estimates never propagate, so the router
+    prices remote hot gateways as cold and may well rank the hot chain
+    first (a misroute).  The property: ranking is ONLY advisory — every
+    admission still 2PC-validates against real residuals, so nothing
+    over-commits no matter how wrong the view is."""
+    rg, assign, cp = _grid_plane(fanout=0, chain_k=3, max_attempts=3,
+                                 micro_batch=6)
+    _saturate_region_compute(cp, 1)
+    rng = np.random.default_rng(3)
+    for step in range(20):
+        src = int(rng.choice(np.nonzero(assign == 0)[0]))
+        dst = int(rng.choice(np.nonzero(assign == 2)[0]))
+        cp.submit("a", DataflowPath.make(
+            [0.0, 0.3, 0.3, 0.0], [1.0] * 3, src=src, dst=dst))
+        cp.pump()
+        # the home region's view holds no region-1 estimates to warn it
+        assert all(int(assign[u]) == 0 for u in cp.bus.congestion_view(0))
+        for rcp in cp.regions:
+            assert np.all(rcp.placer.cap >= -1e-6)
+            assert np.all(rcp.placer.bw >= -1e-6)
+        assert all(-1e-6 <= cp.cut_residual[e] <= cp.cut_base[e] + 1e-6
+                   for e in cp.cut_base)
+        cp.check_invariants()
+    assert cp.span_stats["admitted"] >= 1  # spans still flowed
+    assert cp.bus.max_staleness() >= 10    # and the view really was stale
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chain_racer_bit_identical_on_unique_chain_topology(seed):
+    """Acceptance gate: on a region line (ONE loopless chain per pair,
+    one gate per hop) the k-chain racer must collapse to the legacy
+    single-chain broker bit for bit — same admissions, same residuals,
+    same cut ledger, same stats, step by step under fuzzed ops."""
+    from repro.core import region_line
+
+    rg, assign = region_line(4, 3, seed=seed)
+    kw = dict(regions=4, region_of=assign, micro_batch=6, max_attempts=3,
+              seed=seed, fanout=1, **PYM)
+    legacy = RegionalControlPlane(rg, chain_k=1, **kw)
+    racer = RegionalControlPlane(rg, chain_k=3, **kw)
+    for cp in (legacy, racer):
+        cp.register_tenant("a", weight=3.0)
+        cp.register_tenant("b", weight=1.0)
+    cuts = sorted(legacy.cut_base)
+    rng = np.random.default_rng(seed)
+    failed: list[tuple[int, int]] = []
+    for step in range(50):
+        op = rng.choice(
+            ["submit", "pump", "release", "partition", "heal"],
+            p=[0.35, 0.30, 0.15, 0.10, 0.10],
+        )
+        if op == "submit":
+            r1, r2 = rng.choice(4, size=2, replace=False)
+            src = int(rng.choice(np.nonzero(assign == r1)[0]))
+            dst = int(rng.choice(np.nonzero(assign == r2)[0]))
+            p = int(rng.integers(2, 6))
+            creq = rng.uniform(0.02, 0.15, p).astype(np.float32)
+            creq[0] = creq[-1] = 0.0
+            breq = rng.uniform(0.5, 2.0, p - 1).astype(np.float32)
+            df = DataflowPath(creq, breq, src, dst)
+            t = str(rng.choice(["a", "b"]))
+            assert legacy.submit(t, df) == racer.submit(t, df)
+        elif op == "pump":
+            assert ([getattr(t, "rid", None) for t in legacy.pump()]
+                    == [getattr(t, "rid", None) for t in racer.pump()])
+        elif op == "release":
+            ids = legacy.active_ids()
+            assert ids == racer.active_ids()
+            if ids:
+                rid = int(rng.choice(ids))
+                legacy.release(rid)
+                racer.release(rid)
+        elif op == "partition" and len(failed) < 2:
+            e = cuts[int(rng.integers(0, len(cuts)))]
+            if e not in failed:
+                legacy.fail_link(*e)
+                racer.fail_link(*e)
+                failed.append(e)
+        elif op == "heal" and failed:
+            e = failed.pop(int(rng.integers(0, len(failed))))
+            legacy.restore_link(*e)
+            racer.restore_link(*e)
+        assert legacy.cut_residual == racer.cut_residual
+        for c1, c2 in zip(legacy.regions, racer.regions):
+            np.testing.assert_array_equal(c1.placer.cap, c2.placer.cap)
+            np.testing.assert_array_equal(c1.placer.bw, c2.placer.bw)
+        assert legacy.conservation() == racer.conservation()
+        assert legacy.span_stats == racer.span_stats
+        legacy.check_invariants()
+        racer.check_invariants()
+    assert legacy.span_stats["admitted"] > 0  # the fuzz exercised spans
+    assert racer.span_stats["rerouted"] == 0  # nothing to reroute to
+
+
+def test_displacement_livelock_budget_eventually_drops():
+    """Regression: a spanning request ping-ponging between admission and
+    displacement used to reset its attempt budget on every displacement —
+    livelocking forever.  The cumulative budget (max_cum_attempts) now
+    drops it, visibly, after bounded work."""
+    rg, cp = _line_plane(2, max_cum_attempts=3)
+    (u, v) = max(cp.cut_base, key=cp.cut_base.get)
+    rid = cp.submit("a", DataflowPath.make([0.1, 0.1], [1.0], u, v))
+    (t,) = cp.pump()
+    for i in range(3):
+        assert cp.fail_link(*t.cut)[1]  # displaced every time
+        cp.restore_link(*t.cut)
+        out = cp.pump()
+        if i < 2:  # budget not yet spent: readmitted, same rid
+            assert [s.rid for s in out] == [rid]
+            (t,) = out
+        else:      # the third displacement spent the cumulative budget
+            assert out == []
+    assert cp.span_stats["livelock_dropped"] == 1
+    assert cp.span_stats["max_req_attempts"] == 3
+    led = cp.conservation()
+    assert led["ok"] and led["dropped"] == 1 and led["active"] == 0
+    assert all(cp.cut_residual[e] == pytest.approx(cp.cut_base[e])
+               for e in cp.cut_base)
+    cp.check_invariants()
+
+
+def test_attempts_admitted_counted_once():
+    """Accounting regression: attempts is counted once per
+    _try_place_spanning entry, admitted once per 2PC commit — neither is
+    double-counted between the pump drain and the broker interface."""
+    rg, cp = _regional()
+    rid = cp.submit("a", _spanning_df(cp))
+    cp.pump()
+    assert cp.span_stats["attempts"] == 1 and cp.span_stats["admitted"] == 1
+    cp.release(rid)
+    (u, v) = max(cp.cut_base, key=cp.cut_base.get)
+    huge = float(np.sum(rg.cap)) + 1.0
+    cp.submit("a", DataflowPath.make([0.0, huge, 0.0], [1.0, 1.0], u, v))
+    cp.pump()  # a failing attempt counts attempts but not admitted
+    assert cp.span_stats["attempts"] == 2 and cp.span_stats["admitted"] == 1
+    cp.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# cut-ledger coherence regressions (fail/restore, half-dead spans)
+# ---------------------------------------------------------------------------
+
+
+def test_cut_fail_restore_idempotent_and_restores_full_residual():
+    """Double fail / double restore of a cut under a standing span: the
+    teardown returns the cut bandwidth exactly once, the healed cut
+    reappears with its full base residual in both directions, and the
+    displaced request is readmitted."""
+    rg, cp = _line_plane(3)
+    df = DataflowPath.make([0.0, 0.2, 0.2, 0.0], [1.0] * 3,
+                           src=0, dst=rg.n - 1)
+    rid = cp.submit("a", df)
+    (t,) = cp.pump()
+    e = t.cuts[0]
+    cp.fail_link(*e)
+    cp.fail_link(*e)  # idempotent: nothing left to displace or return
+    cp.check_invariants()
+    assert all(-1e-6 <= cp.cut_residual[c] <= cp.cut_base[c] + 1e-6
+               for c in cp.cut_base)
+    assert cp.cut_residual[e] == pytest.approx(cp.cut_base[e])
+    assert not cp.cut_link_up[e]
+    assert cp._region_chain(0, 2) is None  # quotient graph partitioned
+    cp.restore_link(*e)
+    cp.restore_link(*e)  # idempotent
+    assert cp.cut_link_up[e] and cp.cut_link_up[(e[1], e[0])]
+    assert cp.cut_residual[e] == pytest.approx(cp.cut_base[e])
+    out = cp.pump()
+    assert [s.rid for s in out] == [rid]
+    cp.check_invariants()
+
+
+def test_restore_never_failed_cut_does_not_inflate_residual():
+    """restore_link on a healthy cut carrying a live reservation must be
+    a no-op on the ledger: residual stays base - reserved (a heal never
+    mints bandwidth)."""
+    rg, cp = _line_plane(2)
+    (u, v) = max(cp.cut_base, key=cp.cut_base.get)
+    cp.submit("a", DataflowPath.make([0.1, 0.1], [1.0], u, v))
+    (t,) = cp.pump()
+    before = dict(cp.cut_residual)
+    cp.restore_link(*t.cut)
+    assert cp.cut_residual == before
+    assert cp.cut_residual[t.cut] == pytest.approx(cp.cut_base[t.cut] - 1.0)
+    cp.check_invariants()
+
+
+def test_half_dead_span_fail_link_returns_cut_bandwidth_once():
+    """A region silently losing its segment (placer-level release, no
+    broker hand-off) followed by a cut failure: the span teardown must
+    return the cut bandwidth exactly once — residual == base, never
+    above it."""
+    rg, cp = _line_plane(2)
+    (u, v) = max(cp.cut_base, key=cp.cut_base.get)
+    cp.submit("a", DataflowPath.make([0.1, 0.1], [1.0], u, v))
+    (t,) = cp.pump()
+    part = t.parts[0]
+    cp.regions[part.region].placer.release(part.tid, reason=None)
+    cp.fail_link(*t.cut)
+    assert cp.cut_residual[t.cut] == pytest.approx(cp.cut_base[t.cut])
+    assert all(cp.cut_residual[c] <= cp.cut_base[c] + 1e-6
+               for c in cp.cut_base)
+    cp.check_invariants()
+    assert cp.conservation()["ok"]
+
+
+def test_release_of_displaced_request_raises_like_centralized():
+    """release() of a rid that was displaced back to a queue (not
+    active) is a caller bug and raises KeyError — the same contract as
+    the centralized plane — and must not corrupt the ledger."""
+    rg, cp = _line_plane(2)
+    (u, v) = max(cp.cut_base, key=cp.cut_base.get)
+    rid = cp.submit("a", DataflowPath.make([0.1, 0.1], [1.0], u, v))
+    (t,) = cp.pump()
+    cp.fail_link(*t.cut)
+    with pytest.raises(KeyError):
+        cp.release(rid)
+    led = cp.conservation()
+    assert led["ok"] and led["queued"] == 1
+    cp.restore_link(*t.cut)
+    out = cp.pump()
+    assert [s.rid for s in out] == [rid]
+    cp.check_invariants()
