@@ -243,6 +243,7 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
                   hold: float = 2.0, horizon: float = 10.0, tick: float = 0.25,
                   fail_every: float = 2.5, warmup: float = 2.0, seed: int = 11,
                   use_kernel: bool = True, pipeline_depth: int = 1,
+                  cache: bool = True, repeat_pool: int | None = None,
                   out_path: str | None = "BENCH_streaming.json"):
     """Poisson arrival/departure process against one shared network.
 
@@ -266,19 +267,31 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
     ``steady_admission_rate`` counts only arrivals after ``warmup``: the
     ramp-up (an empty network admits everything) otherwise masks the
     saturation knee the overload sweep is looking for.
+
+    ``cache`` toggles the placer's incremental fast path;
+    ``repeat_pool=k`` makes the workload repeat-heavy — the arrival
+    stream cycles through ``k`` distinct request shapes instead of
+    drawing a fresh one per arrival, which is the regime the
+    mapping-reuse cache is built for (``run_cache_fastpath`` pairs the
+    two knobs into the gated on/off comparison).
     """
     rng = np.random.default_rng(seed)
     rg = waxman(n, seed=seed)
-    placer = OnlinePlacer(rg, use_kernel=use_kernel)
+    placer = OnlinePlacer(rg, use_kernel=use_kernel, cache_enabled=cache)
     warm_max = placer.warmup(max_batch=int(max(4 * rate * tick, 2)), p=p)
     pipe = AdmissionPipeline(placer, depth=pipeline_depth)
 
     # Poisson arrivals over the horizon
     arrivals = _poisson_times(rng, rate, horizon)
-    reqs = _request_stream(rg, len(arrivals), p, seed0=int(seed) * 131)
+    if repeat_pool:
+        pool = _request_stream(rg, repeat_pool, p, seed0=int(seed) * 131)
+        reqs = [pool[k % repeat_pool] for k in range(len(arrivals))]
+    else:
+        reqs = _request_stream(rg, len(arrivals), p, seed0=int(seed) * 131)
 
     departures: list[tuple[float, int]] = []  # heap of (t_depart, tid)
     admit_ms: list[float] = []
+    admit_ms_steady: list[float] = []  # pushes after `warmup` only
     remap_ms: list[float] = []
     displaced_total = remapped_total = 0
     offered = admitted_arrivals = 0  # arrival stream only (churn re-
@@ -326,7 +339,10 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
                 offered_steady += len(batch)
             t0 = time.perf_counter()
             committed = pipe.push(batch, tag=(now >= warmup))
-            admit_ms.append(1e3 * (time.perf_counter() - t0))
+            dt_ms = 1e3 * (time.perf_counter() - t0)
+            admit_ms.append(dt_ms)
+            if now >= warmup:
+                admit_ms_steady.append(dt_ms)
             for pending, tickets in committed:
                 for tk in tickets:
                     if tk is not None:
@@ -370,6 +386,13 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
         "batch_conflicts": st.batch_conflicts,
         "admit_ms_mean": float(np.mean(admit_ms)) if admit_ms else 0.0,
         "admit_ms_p95": float(np.percentile(admit_ms, 95)) if admit_ms else 0.0,
+        # ramp-up excluded, same convention as steady_admission_rate: the
+        # first pushes pay the one-time pool-fill solves (and, cache-on,
+        # the signature-cache cold misses), which are not the steady tail
+        "admit_ms_p95_steady": float(np.percentile(admit_ms_steady, 95))
+        if admit_ms_steady else 0.0,
+        "admit_ms_mean_steady": float(np.mean(admit_ms_steady))
+        if admit_ms_steady else 0.0,
         "churn_events": len(remap_ms),
         "displaced": displaced_total,
         "remapped": remapped_total,
@@ -381,6 +404,19 @@ def run_streaming(*, n: int = 24, p: int = 5, rate: float = 24.0,
         "conflict_resolve_ms": st.conflict_resolve_ms,
         "stale_batches": st.stale_batches,
         "flush_ms": flush_ms,
+        "cache_enabled": cache,
+        "repeat_pool": repeat_pool,
+        "solves": st.solves,
+        "cache_hits": st.cache_hits,
+        "cache_misses": st.cache_misses,
+        "cache_stale": st.cache_stale,
+        "cache_neg_hits": st.cache_neg_hits,
+        "hit_rate": st.cache_hits / max(
+            st.cache_hits + st.cache_misses + st.cache_stale
+            + st.cache_neg_hits, 1),
+        "warm_solves": st.warm_solves,
+        "warm_fallbacks": st.warm_fallbacks,
+        "supersteps": {m: dict(b) for m, b in st.supersteps.items()},
         "invariants_ok": True,
     }
     if out_path is not None:
@@ -523,6 +559,111 @@ def run_overload_sweep(*, rates=(12.0, 24.0, 48.0, 96.0, 192.0),
         with open(out_path, "w") as f:
             json.dump(record, f, indent=2)
     return record
+
+
+def _superstep_stats(supersteps: dict) -> dict:
+    """{mode: {rounds: count}} -> {mode: {solves, mean, max}} (tolerates
+    the string keys a JSON round-trip introduces)."""
+    out = {}
+    for mode, buckets in supersteps.items():
+        total = sum(buckets.values())
+        out[mode] = {
+            "solves": total,
+            "mean": sum(int(r) * c for r, c in buckets.items())
+            / max(total, 1),
+            "max": max((int(r) for r in buckets), default=0),
+        }
+    return out
+
+
+def run_cache_fastpath(*, n: int = 24, p: int = 5, rate: float = 16.0,
+                       hold: float = 0.6, horizon: float = 12.0,
+                       churn_hold: float = 2.0, churn_fail_every: float = 2.5,
+                       warmup: float = 2.0, repeat_pool: int = 6,
+                       reps: int = 2, seed: int = 11,
+                       use_kernel: bool = True):
+    """Repeat-heavy streaming point, incremental fast path on vs off.
+
+    Two workload phases, matching the two tiers:
+
+    - **steady** (the p95 gate): the arrival stream cycles
+      ``repeat_pool`` request shapes below the knee with no churn and a
+      short ``hold``, so repeats mostly find the residual their cached
+      mapping was committed against — tier-1 hits replace the DP with an
+      O(p) revalidation and the admit tail collapses.  min-of-reps on
+      the p95 (the robust floor; everything above it is interference).
+    - **churn** (the superstep gate): same pool under periodic node
+      failure and a longer hold, so entries go stale and the tier-2
+      warm-started bounded correction path runs; its superstep buckets
+      must sit strictly below the cold fixpoint's worst case (the
+      ``max_correction_supersteps`` fuse, vs the rounds a cold batch
+      solve actually takes).
+
+    Gates in ``criterion`` (merged into BENCH_streaming.json):
+    cache-on admit p95 <= 0.5x cache-off; lookup hit rate >= 0.5;
+    steady-state admission rate within 1 point of the cold path; warm
+    solves report strictly fewer supersteps than cold.
+    """
+    def _best(cache, **kw):
+        best = None
+        for _ in range(max(1, reps)):
+            rec = run_streaming(
+                n=n, p=p, rate=rate, horizon=horizon, warmup=warmup,
+                seed=seed, use_kernel=use_kernel, cache=cache,
+                repeat_pool=repeat_pool, out_path=None, **kw)
+            if (best is None
+                    or rec["admit_ms_p95_steady"]
+                    < best["admit_ms_p95_steady"]):
+                best = rec
+        return best
+
+    quiet = dict(hold=hold, fail_every=4 * horizon)  # no churn in-horizon
+    off = _best(False, **quiet)
+    on = _best(True, **quiet)
+    churn = _best(True, hold=churn_hold, fail_every=churn_fail_every)
+    ss = _superstep_stats(churn["supersteps"])
+    warm, cold = ss.get("warm"), ss.get("cold")
+    keep = ("admit_ms_mean", "admit_ms_p95", "admit_ms_mean_steady",
+            "admit_ms_p95_steady", "steady_admission_rate",
+            "solves", "cache_hits", "cache_misses", "cache_stale",
+            "cache_neg_hits", "hit_rate", "warm_solves", "warm_fallbacks",
+            "supersteps", "stale_batches", "batch_conflicts")
+    record = {
+        "n": n, "p": p, "rate": rate, "hold": hold, "horizon": horizon,
+        "churn_hold": churn_hold, "churn_fail_every": churn_fail_every,
+        "repeat_pool": repeat_pool, "reps": reps,
+        "off": {k: off[k] for k in keep},
+        "on": {k: on[k] for k in keep},
+        "churn": {k: churn[k] for k in keep},
+        "p95_ratio": on["admit_ms_p95_steady"]
+        / max(off["admit_ms_p95_steady"], 1e-9),
+        "superstep_stats": ss,
+        "criterion": {
+            "cache_p95_le_0p5x_off":
+                on["admit_ms_p95_steady"]
+                <= 0.5 * off["admit_ms_p95_steady"],
+            "cache_hit_rate_ge_0p5": on["hit_rate"] >= 0.5,
+            "cache_admission_within_1pt":
+                abs(on["steady_admission_rate"]
+                    - off["steady_admission_rate"]) <= 0.01,
+            "warm_supersteps_lt_cold": bool(
+                warm and cold and warm["max"] < cold["max"]),
+        },
+    }
+    return record
+
+
+def merge_cache_fastpath(swrec: dict, crec: dict,
+                         out_path: str | None = "BENCH_streaming.json"
+                         ) -> dict:
+    """Fold the cache on/off comparison into the streaming record (its
+    gates join the record-level ``criterion`` the CI fast lane asserts)."""
+    swrec["cache"] = crec
+    swrec["criterion"].update(crec["criterion"])
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(swrec, f, indent=2)
+    return swrec
 
 
 def _obs_disabled_overhead(iters: int = 50_000) -> dict:
@@ -799,6 +940,7 @@ def run():
         ),
     })
     swrec = run_overload_sweep()
+    swrec = merge_cache_fastpath(swrec, run_cache_fastpath())
     srec = swrec["baseline"]
     rows.append({
         "name": "placement_streaming_poisson",
@@ -809,6 +951,18 @@ def run():
             f"remap_ms_p95={srec['remap_ms_p95']:.1f};"
             f"dropped={srec['dropped']};"
             f"knee_rate={swrec['knee']['rate']:.0f}"
+        ),
+    })
+    crec = swrec["cache"]
+    rows.append({
+        "name": "placement_cache_fastpath",
+        "us_per_call": 1e3 * crec["on"]["admit_ms_mean"],
+        "derived": (
+            f"p95_ratio={crec['p95_ratio']:.2f};"
+            f"hit_rate={crec['on']['hit_rate']:.2f};"
+            f"warm_solves={crec['on']['warm_solves']};"
+            f"solves_on={crec['on']['solves']};"
+            f"solves_off={crec['off']['solves']}"
         ),
     })
     frec = run_fairness(knee_rate=swrec["knee"]["rate"])
@@ -843,11 +997,13 @@ if __name__ == "__main__":
             n=20, rates=(24.0, 48.0, 96.0, 192.0), horizon=5.0,
             baseline_rate=16.0,
         )
+        swrec = merge_cache_fastpath(swrec, run_cache_fastpath(n=20))
         frec = run_fairness(knee_rate=swrec["knee"]["rate"], n=20,
                             horizon=6.0, warmup=2.0)
     else:
         rec = run_online()
         swrec = run_overload_sweep()
+        swrec = merge_cache_fastpath(swrec, run_cache_fastpath())
         frec = run_fairness(knee_rate=swrec["knee"]["rate"])
     print(json.dumps(
         {"online": rec, "streaming": swrec, "fairness": frec}, indent=2))

@@ -156,9 +156,16 @@ def replay(make_plane, events, churn, *, rounds: int, warmup: int,
         msgs = cr["gossip_messages_total"] + cr["twopc_messages_total"]
     else:
         msgs = cr["gossip_messages"] + cr["twopc_messages"]
+    # incremental-fast-path columns, summed over every per-region placer
+    # through the plane's merged metrics registry (zero when disabled)
+    reg = cp.metrics_registry()
     lat = np.asarray(latencies, np.float64)
     return {
         "plane": label,
+        "cache_hits": int(reg.total("placer.cache_hits")),
+        "cache_misses": int(reg.total("placer.cache_misses")),
+        "cache_stale": int(reg.total("placer.cache_stale")),
+        "warm_solves": int(reg.total("placer.warm_solves")),
         "steady_submitted": steady_sub,
         "steady_admitted": steady_adm,
         "admission_rate": round(steady_adm / max(steady_sub, 1), 4),
@@ -275,6 +282,65 @@ def run_json(smoke: bool = False, out_path: str = "BENCH_trace.json") -> dict:
     return report
 
 
+def run_scale10k(out_path: str = "BENCH_trace10k.json", *,
+                 rounds: int = 24, warmup: int = 8,
+                 base_rate: float = 12.0) -> dict:
+    """The ROADMAP's full 10k-node scheduled-lane point: one trace over
+    ``region_tree(4, 4, 40)`` (256 40-node leaves, n=10240), replayed on
+    the flat R=256 plane and the 2-level (16x16) hierarchy, each with the
+    incremental fast path on and off.  Fewer rounds than the 1k/4k
+    scenarios — at this scale each round already spans hundreds of
+    region-local solves, and the point of the run is the scaling shape
+    (resident state, admission, cache traffic), not tail quantiles."""
+    t0 = time.perf_counter()
+    sc = run_scenario(
+        4, 4, 40, rounds=rounds, warmup=warmup, base_rate=base_rate,
+        plane_cfgs=[
+            ("flat", {}),
+            ("flat-nocache", {"cache_enabled": False}),
+            ("2-level", {"levels": 2, "branching": 16}),
+            ("2-level-nocache",
+             {"levels": 2, "branching": 16, "cache_enabled": False}),
+        ],
+    )
+    wallclock = time.perf_counter() - t0
+
+    def plane(name):
+        return next(p for p in sc["planes"] if p["plane"] == name)
+
+    report = {
+        "bench": "trace_replay_10k",
+        "wallclock_s": round(wallclock, 2),
+        "scenario": sc,
+        "criterion": {
+            # the hierarchy's scaling claim holds at the full 10k point
+            "hier_state_strictly_smaller":
+                plane("2-level")["max_component_state"]
+                < plane("flat")["max_component_state"],
+            # the fast path pays for itself in traffic without costing
+            # admitted work, at both plane shapes
+            "cache_hits_positive": all(
+                plane(name)["cache_hits"] > 0
+                for name in ("flat", "2-level")
+            ),
+            "cache_admission_within_5pts": all(
+                abs(plane(name)["admission_rate"]
+                    - plane(f"{name}-nocache")["admission_rate"]) <= 0.05
+                for name in ("flat", "2-level")
+            ),
+            "conservation_ok": all(
+                p["conservation_ok"] for p in sc["planes"]),
+            "solves_leaf_local": all(
+                p["max_solve_n"] <= sc["k"] for p in sc["planes"]),
+        },
+    }
+    report["ok"] = all(report["criterion"].values())
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return report
+
+
 def run_trace_export(out_path: str = "BENCH_trace_events.json",
                      *, seed: int = 9) -> dict:
     """Export a Perfetto/Chrome-trace JSON of one spanning request's full
@@ -378,7 +444,24 @@ if __name__ == "__main__":
                     help="export a Perfetto/Chrome-trace JSON of one "
                          "spanning request's lifecycle and exit (skips "
                          "the replay benchmark)")
+    ap.add_argument("--scale10k", action="store_true",
+                    help="the scheduled-lane n=10240 point (flat vs "
+                         "2-level, cache on/off) -> BENCH_trace10k.json; "
+                         "skips the regular replay benchmark")
     args = ap.parse_args()
+    if args.scale10k:
+        rep = run_scale10k()
+        sc = rep["scenario"]
+        for p in sc["planes"]:
+            print(f"n={sc['n']:5d} {p['plane']:16s} "
+                  f"admit={p['admission_rate']:.3f} "
+                  f"state={p['max_component_state']} "
+                  f"hits={p['cache_hits']} warm={p['warm_solves']} "
+                  f"wall={p['wallclock_s']}s")
+        print(json.dumps(rep["criterion"], indent=2))
+        print(f"ok={rep['ok']} wallclock={rep['wallclock_s']}s "
+              "-> BENCH_trace10k.json")
+        raise SystemExit(0 if rep["ok"] else 1)
     if args.trace_out is not None:
         rep = run_trace_export(args.trace_out)
         print(rep["timeline"])

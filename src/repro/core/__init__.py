@@ -10,6 +10,8 @@ Public API:
                multi-request service with cross-batch solve/commit overlap
   residual:    ResidualState — device-resident residual tensors, versioned
                host mirror, staleness epochs for in-flight solves
+  solution_cache: SolutionCache — mapping-reuse cache behind the placer's
+               incremental admission fast path (validate-before-reserve)
   exact:       pathmap_exact (paper Alg. 1-3), brute_force oracle
   leastcost:   leastcost_python (faithful §3.4.1), leastcost_jax (tensorized)
   simulator:   simulate (paper Alg. 4, async message passing, all §3.4 policies)
@@ -54,6 +56,7 @@ from .online import (  # noqa: F401
     Ticket,
 )
 from .residual import ResidualState  # noqa: F401
+from .solution_cache import SolutionCache, request_signature  # noqa: F401
 from .topology import (  # noqa: F401
     barabasi_albert,
     paper_example,

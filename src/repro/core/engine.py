@@ -209,10 +209,14 @@ def solve_batch(
     if method in BATCHED_METHODS:
         from .leastcost import leastcost_jax_batched
 
+        # warm-start seeds live in the caller's (already-local) id space;
+        # they cannot survive a view compaction done here
+        assert view is None or view.is_identity or "warm_starts" not in cfg
         stats = Stats(method=method)
         mappings = leastcost_jax_batched(rg, list(dfs), stats=stats, **cfg)
     else:
         cfg.pop("graph_tensors", None)  # host-loop backends have no device path
+        cfg.pop("warm_starts", None)  # warm seeding is a batched-DP feature
         mappings = []
         stats = Stats(method=method)
         for df in dfs:
@@ -314,6 +318,7 @@ def solve_batch_dispatch(
         t0 = time.perf_counter()
         if view is not None and not view.is_identity:
             assert graph_tensors is None, "view compaction vs device tensors"
+            assert "warm_starts" not in cfg, "warm seeds vs view compaction"
             rg = view.compact_graph(rg)
             dfs = [view.compact_df(d) for d in dfs]
         pending = leastcost_jax_batched_dispatch(

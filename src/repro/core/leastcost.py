@@ -144,6 +144,116 @@ def leastcost_python(
 # 2. Tensorized JAX DP (beyond paper)
 # ---------------------------------------------------------------------------
 
+# Tensor keys carrying a warm-start cost frontier (see
+# :func:`warm_seed_from_mapping`).  Their presence in the ``tensors`` dict
+# is a python-level (trace-time) condition, so warm and cold solves compile
+# as separate specializations and the cold path is byte-identical to before.
+_WARM_KEYS = ("warm_v", "warm_j", "warm_c", "warm_pv", "warm_pj")
+_WARM_IN_AXES = {k: 0 for k in _WARM_KEYS}
+
+
+def warm_seed_from_mapping(rg: ResourceGraph, df: DataflowPath, mapping):
+    """Host-side O(p + route) walk turning a previously-committed (now
+    possibly infeasible) mapping into a DP cost frontier.
+
+    Walks the mapping's route edge by edge under the *current* residual
+    ``rg``, emitting one seed state per arrival ``(v, j, cost)`` with its
+    parent ``(u, j_prev)`` — exactly the arrival states the cold DP would
+    rediscover — and stops at the first constraint violation (capacity
+    window, bandwidth gate, dead link, or route exhaustion).  Every seeded
+    state is achievable under the current residual, so seeding ``C0`` with
+    it preserves the DP invariant "C[v,j] is a realizable cost" and the
+    relaxation can only improve on it.  Returns a seed dict (numpy arrays
+    ``v/j/cost/pv/pj``) or None when not even the first hop survives.
+    """
+    assign, route = mapping.assign, mapping.route
+    cap, bw, lat = rg.cap, rg.bw, rg.lat
+    p = df.p
+    sv, sj, sc, spv, spj = [], [], [], [], []
+    pos = 0  # last df node whose outgoing edge has been carried
+    prev_j = 0  # arrival prefix length at the current route node
+    cost = np.float32(0.0)
+    for u, w in zip(route[:-1], route[1:]):
+        while pos + 1 < p and assign[pos + 1] == u:
+            pos += 1
+        # df nodes placed at u this visit: prev_j .. pos inclusive
+        block = float(np.sum(df.creq[prev_j:pos + 1], dtype=np.float64))
+        if block > float(cap[u]) + EPS_CAP_F32:
+            break
+        if pos >= p - 1:
+            break  # nothing left to move; dst tail handled by the DP
+        lw = float(lat[u, w])
+        if not np.isfinite(lw):
+            break
+        if float(bw[u, w]) < float(df.breq[pos]):
+            break  # same exact gate as the DP move step
+        cost = np.float32(cost + np.float32(lw))
+        sv.append(w)
+        sj.append(pos + 1)
+        sc.append(cost)
+        spv.append(u)
+        spj.append(prev_j)
+        prev_j = pos + 1
+    if not sv:
+        return None
+    return {
+        "v": np.asarray(sv, np.int32), "j": np.asarray(sj, np.int32),
+        "cost": np.asarray(sc, np.float32),
+        "pv": np.asarray(spv, np.int32), "pj": np.asarray(spj, np.int32),
+    }
+
+
+def stack_warm_seeds(warm_starts, B: int, p_max: int) -> dict:
+    """Stack per-request seed dicts (None = no seed) into padded (B, S)
+    device tensors.  S is power-of-two padded so the stream of varying
+    seed lengths compiles at most log2(max route) warm specializations.
+    Pad slots use ``cost=BIG`` + parents ``-1``: ``_apply_warm`` merges
+    with ``.min``/``.max``, so a pad slot is provably a no-op against the
+    cold init (``C0=BIG``, parents ``-1``)."""
+    S = 1
+    for w in warm_starts:
+        if w is not None and len(w["v"]) > S:
+            S = len(w["v"])
+    S = 1 << (S - 1).bit_length()
+    wv = np.zeros((B, S), np.int32)
+    wj = np.zeros((B, S), np.int32)
+    wc = np.full((B, S), BIG, np.float32)
+    wpv = np.full((B, S), -1, np.int32)
+    wpj = np.full((B, S), -1, np.int32)
+    for b in range(min(B, len(warm_starts))):
+        w = warm_starts[b]
+        if w is None:
+            continue
+        s = len(w["v"])
+        wv[b, :s] = w["v"]
+        wj[b, :s] = w["j"]
+        wc[b, :s] = w["cost"]
+        wpv[b, :s] = w["pv"]
+        wpj[b, :s] = w["pj"]
+    return {
+        "warm_v": jnp.asarray(wv), "warm_j": jnp.asarray(wj),
+        "warm_c": jnp.asarray(wc), "warm_pv": jnp.asarray(wpv),
+        "warm_pj": jnp.asarray(wpj),
+    }
+
+
+def _apply_warm(C0, pv0, pj0, tensors):
+    """Merge a warm-start frontier into the cold DP init.  ``min`` on
+    costs keeps the invariant that every finite C entry is realizable;
+    ``max`` on parents is exact because real seeds target distinct
+    ``(v, j)`` cells (a simple route visits each node once) whose cold
+    parents are ``-1``, and pad slots carry ``-1``/``BIG`` no-ops."""
+    wv, wj = tensors["warm_v"], tensors["warm_j"]
+    wc, wpv, wpj = tensors["warm_c"], tensors["warm_pv"], tensors["warm_pj"]
+    if C0.ndim == 3:  # batched (B, n, K)
+        b = jnp.arange(C0.shape[0])[:, None]
+        return (C0.at[b, wv, wj].min(wc),
+                pv0.at[b, wv, wj].max(wpv),
+                pj0.at[b, wv, wj].max(wpj))
+    return (C0.at[wv, wj].min(wc),
+            pv0.at[wv, wj].max(wpv),
+            pj0.at[wv, wj].max(wpj))
+
 
 def _place_step(C, cap, prefix):
     """P[v,k] = min over x>=0 of C[v,k-x] s.t. prefix[k]-prefix[k-x] <= cap[v].
@@ -239,6 +349,8 @@ def _leastcost_dp(tensors, n: int, p: int, max_rounds: int):
     C0 = C0.at[tensors["src"], 0].set(0.0)
     par_v0 = jnp.full((n, p + 1), -1, jnp.int32)
     par_j0 = jnp.full((n, p + 1), -1, jnp.int32)
+    if "warm_v" in tensors:
+        C0, par_v0, par_j0 = _apply_warm(C0, par_v0, par_j0, tensors)
 
     def cond(carry):
         t, (C, pv, pj, changed) = carry
@@ -264,14 +376,16 @@ def _leastcost_dp(tensors, n: int, p: int, max_rounds: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _vmapped_dp(n: int, p: int, max_rounds: int):
+def _vmapped_dp(n: int, p: int, max_rounds: int, warm: bool = False):
     """Cached jit-of-vmap of the per-request DP: without the outer jit the
     python-level vmap batching trace re-runs on every call, a measurable
-    per-batch overhead on the online placer's hot path."""
+    per-batch overhead on the online placer's hot path.  ``warm=True``
+    expects the ``_WARM_KEYS`` frontier tensors batched along axis 0."""
+    axes = dict(BATCH_IN_AXES, **_WARM_IN_AXES) if warm else BATCH_IN_AXES
     return jax.jit(
         jax.vmap(
             lambda t: _leastcost_dp(t, n=n, p=p, max_rounds=max_rounds),
-            in_axes=(BATCH_IN_AXES,),
+            in_axes=(axes,),
         )
     )
 
@@ -305,6 +419,10 @@ def _leastcost_dp_batched(tensors, B: int, n: int, p: int, max_rounds: int,
     C0 = C0.at[jnp.arange(B), tensors["src"], 0].set(0.0)
     pv0 = jnp.full((B, n, K), -1, jnp.int32)
     pj0 = jnp.full((B, n, K), -1, jnp.int32)
+    if "warm_v" in tensors:
+        # warm frontier merged before the kernel-path fill(), so the padded
+        # state inherits the seeds too
+        C0, pv0, pj0 = _apply_warm(C0, pv0, pj0, tensors)
 
     if impl == "ref":
         step = functools.partial(
@@ -377,9 +495,10 @@ class PendingDP:
     par_j: object
     best_cost: object  # (B,) device array
     best_j: object
-    rounds: object  # device scalar (kernel path) | None
+    rounds: object  # device scalar (kernel) | (B,) array (vmapped) | None
     kernel_impl: str = ""
     validate: bool = True
+    warm: bool = False  # True iff this solve was warm-start seeded
 
 
 def leastcost_jax_batched_dispatch(
@@ -393,6 +512,7 @@ def leastcost_jax_batched_dispatch(
     tiles=None,
     bucket_batch: bool = False,
     graph_tensors=None,
+    warm_starts=None,
 ) -> PendingDP:
     """Dispatch the batched DP without waiting for the result.
 
@@ -405,6 +525,14 @@ def leastcost_jax_batched_dispatch(
     ``core.residual.ResidualState.device_tensors``) so the dispatch ships
     only the O(p) per-request tensors; ``rg`` is still required as the host
     graph the reconstruction loop walks.
+
+    ``warm_starts`` (optional, aligned with ``dfs``) seeds the DP's cost
+    frontier per request — tier 2 of the incremental admission fast path.
+    Each entry is None, a seed dict from :func:`warm_seed_from_mapping`,
+    or a previously-committed ``Mapping`` (converted here against ``rg``).
+    Combine with a small ``max_rounds`` to run a bounded number of
+    correction supersteps instead of a full cold relaxation; the caller
+    falls back to a cold solve for requests the bounded pass cannot place.
     """
     assert dfs
     n = rg.n
@@ -413,6 +541,16 @@ def leastcost_jax_batched_dispatch(
         B = 1 << (B - 1).bit_length()  # next power of two
     tensors, p_max = stack_requests(rg, dfs, pad_to=B,
                                     graph_tensors=graph_tensors)
+    warm = False
+    if warm_starts is not None:
+        seeds = [
+            w if (w is None or isinstance(w, dict))
+            else warm_seed_from_mapping(rg, df, w)
+            for w, df in zip(warm_starts, dfs)
+        ]
+        if any(s is not None for s in seeds):
+            tensors = dict(tensors, **stack_warm_seeds(seeds, B, p_max))
+            warm = True
     max_rounds = max_rounds or (n - 1 if n > 1 else 1)
     impl = ""
     if use_kernel:
@@ -422,11 +560,10 @@ def leastcost_jax_batched_dispatch(
             impl=impl, tiles=tiles,
         )
     else:
-        fn = _vmapped_dp(n, p_max, max_rounds)
+        fn = _vmapped_dp(n, p_max, max_rounds, warm)
         C, par_v, par_j, best_cost, best_j, rounds = fn(tensors)
     return PendingDP(rg, list(dfs), par_v, par_j, best_cost, best_j,
-                     rounds if use_kernel else None,
-                     kernel_impl=impl, validate=validate)
+                     rounds, kernel_impl=impl, validate=validate, warm=warm)
 
 
 def leastcost_jax_batched_finalize(pending: PendingDP, stats=None) -> list:
@@ -438,8 +575,11 @@ def leastcost_jax_batched_finalize(pending: PendingDP, stats=None) -> list:
     par_v, par_j = np.asarray(pending.par_v), np.asarray(pending.par_j)
     best_cost, best_j = np.asarray(pending.best_cost), np.asarray(pending.best_j)
     if stats is not None and pending.rounds is not None:
-        stats.kernel_impl = pending.kernel_impl
-        stats.rounds = int(pending.rounds)
+        if pending.kernel_impl:
+            stats.kernel_impl = pending.kernel_impl
+        # kernel path: one shared device scalar; vmapped path: (B,) per-
+        # request superstep counts — report the batch's slowest request
+        stats.rounds = int(np.max(np.asarray(pending.rounds)))
     out = []
     for i, df in enumerate(pending.dfs):
         per = HeuristicStats()
@@ -468,6 +608,7 @@ def leastcost_jax_batched(
     bucket_batch: bool = False,
     stats=None,
     graph_tensors=None,
+    warm_starts=None,
 ) -> list:
     """Solve many mapping requests on ONE shared resource network in a
     single vmapped DP (§Perf C6): the realistic continuous-arrival case —
@@ -498,6 +639,7 @@ def leastcost_jax_batched(
         rg, dfs, validate=validate, max_rounds=max_rounds,
         use_kernel=use_kernel, kernel_impl=kernel_impl, tiles=tiles,
         bucket_batch=bucket_batch, graph_tensors=graph_tensors,
+        warm_starts=warm_starts,
     )
     return leastcost_jax_batched_finalize(pending, stats=stats)
 
@@ -511,6 +653,7 @@ def leastcost_jax(
     tiles=None,
     max_rounds: Optional[int] = None,
     validate: bool = True,
+    warm_start=None,
 ) -> tuple[Optional[Mapping], HeuristicStats]:
     """Tensorized LeastCostMap.  Returns (mapping | None, stats).
 
@@ -519,14 +662,22 @@ def leastcost_jax(
     jit argument, so B=1 compiles its own specialization; the online
     placer's recompile bound comes from ``admit_many``'s power-of-two
     batch bucketing).
+
+    ``warm_start`` (a seed dict from :func:`warm_seed_from_mapping` or a
+    prior ``Mapping``) seeds the DP frontier; pair with a small
+    ``max_rounds`` for a bounded correction solve.
     """
     n, p = rg.n, df.p
     stats = HeuristicStats()
     max_rounds = max_rounds or (n - 1 if n > 1 else 1)
+    if warm_start is not None and not isinstance(warm_start, dict):
+        warm_start = warm_seed_from_mapping(rg, df, warm_start)
     if use_kernel:
         impl = kernel_impl or ("pallas" if _on_tpu() else "ref")
         stats.kernel_impl = impl
         tensors, _ = stack_requests(rg, [df])
+        if warm_start is not None:
+            tensors = dict(tensors, **stack_warm_seeds([warm_start], 1, p))
         Cb, par_vb, par_jb, best_costb, best_jb, rounds = _leastcost_dp_batched(
             tensors, B=1, n=n, p=p, max_rounds=max_rounds, impl=impl,
             tiles=tiles,
@@ -535,6 +686,9 @@ def leastcost_jax(
         best_cost, best_j = best_costb[0], best_jb[0]
     else:
         tensors = problem_tensors(rg, df)
+        if warm_start is not None:
+            batched = stack_warm_seeds([warm_start], 1, p)
+            tensors = dict(tensors, **{k: v[0] for k, v in batched.items()})
         C, par_v, par_j, best_cost, best_j, rounds = _leastcost_dp(
             tensors, n=n, p=p, max_rounds=max_rounds
         )

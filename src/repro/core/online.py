@@ -35,6 +35,7 @@ Invariant (checked by ``check_invariants``): for every node and link,
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import itertools
 import time
@@ -46,6 +47,7 @@ import numpy as np
 from . import engine
 from .graph import DataflowPath, Mapping, ResourceGraph, validate_mapping
 from .residual import ResidualState
+from .solution_cache import SolutionCache, request_signature
 from ..obs import trace as obs_trace
 
 
@@ -95,10 +97,33 @@ class OnlineStats:
     conflict_resolve_ms: float = 0.0  # individual conflict re-solves, end to end
     solves: int = 0  # DP solves issued (a micro-batch counts once)
     solve_n_sum: int = 0  # summed padded node dimension of those solves
+    # incremental fast path (SolutionCache): cache-hit admissions commit a
+    # revalidated prior mapping with ZERO DP work, so they are deliberately
+    # excluded from solve_ms/solves/solve_n_sum — the timing split and
+    # mean_solve_n keep describing actual solver work.
+    cache_hits: int = 0  # positive hit revalidated against current residual
+    cache_misses: int = 0  # signature never seen (or evicted)
+    cache_stale: int = 0  # entry found but no longer feasible
+    cache_neg_hits: int = 0  # exact-stamp negative entry short-circuited
+    warm_solves: int = 0  # bounded correction solves seeded from stale entries
+    warm_fallbacks: int = 0  # warm pass placed nothing -> cold re-solve
     # solves per kernel backend ("pallas" / "ref" / native impl name):
     # non-additive engine.Stats fields (kernel_impl) carried as labeled
     # counts instead of last-writer-wins when stats fold across regions
     kernel_impls: dict = dataclasses.field(default_factory=dict)
+    # superstep (relaxation-round) histogram per solve mode:
+    # {"cold" | "warm": {rounds: solve count}} — the stat that proves the
+    # warm-started path converges in fewer supersteps than a cold solve
+    supersteps: dict = dataclasses.field(default_factory=dict)
+
+    # solver-work fields preserved across speculative rollbacks (preemption
+    # probes, defrag): wall clock was really spent and cache traffic really
+    # happened even when the state change is rolled back
+    _SOLVE_CARRY = (
+        "solve_ms", "overhead_ms", "conflict_resolve_ms", "solves",
+        "solve_n_sum", "cache_hits", "cache_misses", "cache_stale",
+        "cache_neg_hits", "warm_solves", "warm_fallbacks",
+    )
 
     @property
     def mean_solve_n(self) -> float:
@@ -109,11 +134,27 @@ class OnlineStats:
 
     def clone(self) -> "OnlineStats":
         """Deep-enough copy for snapshot/restore: ``dataclasses.replace``
-        would alias ``kernel_impls`` and leak post-snapshot mutations
-        through a rollback."""
+        would alias ``kernel_impls``/``supersteps`` and leak post-snapshot
+        mutations through a rollback."""
         c = dataclasses.replace(self)
         c.kernel_impls = dict(self.kernel_impls)
+        c.supersteps = {k: dict(v) for k, v in self.supersteps.items()}
         return c
+
+    def solve_accounting(self) -> dict:
+        """Capture the solver-work counters before a speculative rollback."""
+        acct = {f: getattr(self, f) for f in self._SOLVE_CARRY}
+        acct["kernel_impls"] = dict(self.kernel_impls)
+        acct["supersteps"] = {k: dict(v) for k, v in self.supersteps.items()}
+        return acct
+
+    def restore_solve_accounting(self, acct: dict) -> None:
+        """Re-apply counters captured by :meth:`solve_accounting` after a
+        ``restore`` — probes did real solver work even when rolled back."""
+        for f in self._SOLVE_CARRY:
+            setattr(self, f, acct[f])
+        self.kernel_impls = dict(acct["kernel_impls"])
+        self.supersteps = {k: dict(v) for k, v in acct["supersteps"].items()}
 
 
 def _edge_loads(df: DataflowPath, mapping: Mapping) -> dict:
@@ -153,6 +194,17 @@ class PendingAdmission:
     ``tag`` is opaque caller context carried dispatch-to-commit (the
     streaming bench stores dispatch-time virtual clock / steady-phase
     flags there).
+
+    With the incremental fast path active, ``plan`` records the dispatch
+    classification of each request — ``("hit", mapping)`` (cached mapping
+    revalidated at dispatch; commit revalidates again), ``("neg", None)``
+    (exact-stamp negative), ``("warm", seed)`` (stale entry seeding a
+    bounded correction solve in ``warm_handle``) or ``("cold", None)``
+    (full solve in ``handle``).  ``plan is None`` means the cache was off
+    for this batch and the commit path is byte-identical to the pre-cache
+    code.  ``stamp`` is the (residual version, epoch) pair at dispatch —
+    rejections only record negative cache entries if it still matches at
+    commit time.
     """
 
     dfs: list
@@ -161,6 +213,11 @@ class PendingAdmission:
     epoch: int
     tag: object = None
     committed: bool = False
+    plan: Optional[list] = None
+    cold_idx: Optional[list] = None
+    warm_idx: Optional[list] = None
+    warm_handle: Optional[engine.PendingBatchSolve] = None
+    stamp: Optional[tuple] = None
 
 
 class OnlinePlacer:
@@ -174,6 +231,9 @@ class OnlinePlacer:
         use_kernel: bool = False,
         view=None,
         tracer=None,
+        cache_enabled: bool = True,
+        cache_size: int = 512,
+        max_correction_supersteps: int = 4,
         **solve_cfg,
     ):
         """``use_kernel=True`` serves admissions through the fused batched
@@ -181,6 +241,22 @@ class OnlinePlacer:
         fused-jnp mirror elsewhere) — both micro-batched ``admit_many`` and
         single-request ``admit`` re-solves take it.  Extra ``solve_cfg``
         (e.g. ``tiles`` or ``kernel_impl``) is forwarded to the backend.
+
+        ``cache_enabled`` turns on the two-tier incremental fast path: a
+        :class:`~repro.core.solution_cache.SolutionCache` of the last
+        committed mapping per request signature (tier 1 — an O(p)
+        revalidation replaces the whole DP on repeat shapes), and, for
+        stale entries on batched backends, a warm-started DP bounded to
+        ``max_correction_supersteps`` relaxation rounds (tier 2) whose
+        failures fall back to a full cold solve — admission quality is
+        never below the cold path.  The cache is advisory: every hit is
+        revalidated against the float64 residual truth before any
+        reserve, so it can never over-commit, and ``cache_enabled=False``
+        is bit-identical to the pre-cache admission path (fuzz-enforced).
+        Both knobs ride ``**solve_cfg`` through
+        ``ControlPlane``/``RegionalControlPlane``/``HierarchicalControlPlane``
+        down to every per-region placer, whose caches operate entirely in
+        view-local ids.
 
         ``view`` (a :class:`~repro.core.compact.CompactedView`) makes this
         a *region-local* placer: ``rg`` may be the global graph — it is
@@ -211,6 +287,35 @@ class OnlinePlacer:
         self.tickets: dict[int, Ticket] = {}
         self.stats = OnlineStats()
         self._tid = itertools.count()
+        self.cache = SolutionCache(cache_size) if cache_enabled else None
+        self.max_correction_supersteps = int(max_correction_supersteps)
+        self._cache_suspend = 0
+
+    # -- incremental fast path ----------------------------------------------
+
+    @property
+    def _cache(self) -> Optional[SolutionCache]:
+        """The cache, or None while disabled/suspended (defrag repacks
+        suspend it: serving the standing mappings back from cache would
+        make the re-optimization a no-op by construction)."""
+        if self.cache is None or self._cache_suspend:
+            return None
+        return self.cache
+
+    @contextlib.contextmanager
+    def cache_suspended(self):
+        """Bypass the cache (lookups AND fills) inside the block."""
+        self._cache_suspend += 1
+        try:
+            yield
+        finally:
+            self._cache_suspend -= 1
+
+    def _stamp(self) -> tuple:
+        """Exact residual identity: host mutation version + staleness epoch
+        (the epoch folds in the CompactedView version, so regional view
+        remaps invalidate negative entries automatically)."""
+        return (self.res.version, self.epoch)
 
     # -- residual view ------------------------------------------------------
     # The residual arrays live in ResidualState (host float64 truth +
@@ -267,6 +372,11 @@ class OnlinePlacer:
         t = Ticket(next(self._tid), df, mapping, node_load, edge_load,
                    tenant=tenant, klass=klass)
         self.tickets[t.tid] = t
+        cache = self._cache
+        if cache is not None:
+            # cache filled only at commit: the entry is a mapping that
+            # really held capacity, the strongest reuse candidate
+            cache.put(request_signature(df), mapping)
         return t
 
     def release(self, ticket: Ticket | int, *,
@@ -328,28 +438,62 @@ class OnlinePlacer:
         ok, _why = validate_mapping(rg, df, mapping)
         return ok
 
-    def _note_solve(self, st) -> None:
+    def _note_solve(self, st, *, mode: str = "cold") -> None:
         """Fold one engine.Stats into the lifetime counters, keeping the
-        non-additive ``kernel_impl`` as a labeled count."""
+        non-additive ``kernel_impl`` as a labeled count and the superstep
+        count as a per-mode histogram bucket."""
         self.stats.solve_ms += st.solve_ms
         self.stats.solves += 1
         self.stats.solve_n_sum += st.solve_n
         if st.kernel_impl:
             k = self.stats.kernel_impls
             k[st.kernel_impl] = k.get(st.kernel_impl, 0) + 1
+        if mode == "warm":
+            self.stats.warm_solves += 1
+        if st.rounds:
+            bucket = self.stats.supersteps.setdefault(mode, {})
+            bucket[int(st.rounds)] = bucket.get(int(st.rounds), 0) + 1
 
     def admit(self, df: DataflowPath, *, tenant: str = "",
               klass: int = 0) -> Optional[Ticket]:
-        """Place one request against the current residual network."""
+        """Place one request against the current residual network.
+
+        With the cache enabled this consults tier 1 first: an exact-stamp
+        negative short-circuits to rejection (sound — the residual is
+        bit-identical to when the deterministic solve last rejected this
+        signature), and a positive entry that revalidates against the
+        current residual commits with zero DP work (and is deliberately
+        NOT counted as a solve).  Anything else falls through to the full
+        solve, exactly the pre-cache path."""
         if not (self.node_up[df.src] and self.node_up[df.dst]):
             self.stats.rejected += 1
             return None
+        cache = self._cache
+        sig = stamp = None
+        if cache is not None:
+            sig = request_signature(df)
+            stamp = self._stamp()
+            if cache.negative_hit(sig, stamp):
+                self.stats.cache_neg_hits += 1
+                self.stats.rejected += 1
+                return None
+            entry = cache.get(sig)
+            if entry is not None:
+                if self._admissible(df, entry, self.residual_graph()):
+                    self.stats.cache_hits += 1
+                    self.stats.admitted += 1
+                    return self._commit(df, entry, tenant=tenant, klass=klass)
+                self.stats.cache_stale += 1
+            else:
+                self.stats.cache_misses += 1
         rg = self.residual_graph()
         with self.tracer.span("solve", track="placer", cat="solve"):
             mapping, st = engine.solve(rg, df, method=self.method,
                                        **self.solve_cfg)
         self._note_solve(st)
         if not self._admissible(df, mapping, rg):
+            if cache is not None and self._stamp() == stamp:
+                cache.put_negative(sig, stamp)
             self.stats.rejected += 1
             return None
         self.stats.admitted += 1
@@ -423,21 +567,15 @@ class OnlinePlacer:
                 return t, preempted
         # probes did real solver work: keep the solve accounting across the
         # rollback (state restores, wall-clock and solve counts do not)
-        solve_ms, solves, solve_n_sum = (
-            self.stats.solve_ms, self.stats.solves, self.stats.solve_n_sum)
-        overhead_ms = self.stats.overhead_ms
-        conflict_ms = self.stats.conflict_resolve_ms
-        kernel_impls = dict(self.stats.kernel_impls)
+        acct = self.stats.solve_accounting()
         self.restore(snap)
-        self.stats.solve_ms = solve_ms
-        self.stats.overhead_ms = overhead_ms
-        self.stats.conflict_resolve_ms = conflict_ms
-        self.stats.solves = solves
-        self.stats.solve_n_sum = solve_n_sum
-        self.stats.kernel_impls = kernel_impls
+        self.stats.restore_solve_accounting(acct)
         return None, []
 
-    def _dispatch_solve(self, dfs: list[DataflowPath]) -> engine.PendingBatchSolve:
+    def _dispatch_solve(self, dfs: list[DataflowPath], *,
+                        warm_starts=None,
+                        max_rounds: Optional[int] = None,
+                        ) -> engine.PendingBatchSolve:
         """Dispatch a batched solve for ``dfs`` against the current residual.
 
         On natively-batching backends the DP consumes the device-resident
@@ -445,11 +583,19 @@ class OnlinePlacer:
         batch is bucketed to the next power of two so a churning arrival
         process triggers at most log2(max batch) jit specializations per
         request shape.  Other backends solve synchronously inside the
-        returned handle."""
+        returned handle.
+
+        ``warm_starts``/``max_rounds`` run the tier-2 bounded correction
+        pass (batched backends only): the DP frontier is seeded from stale
+        cached mappings and the relaxation capped at the fuse."""
         cfg = self.solve_cfg
         graph_tensors = None
         if self.method in engine.BATCHED_METHODS:
             cfg = dict(cfg, bucket_batch=True)
+            if warm_starts is not None:
+                cfg["warm_starts"] = warm_starts
+            if max_rounds is not None:
+                cfg["max_rounds"] = max_rounds
             graph_tensors = self.res.device_tensors()
         with self.tracer.span("dispatch", track="placer", cat="solve",
                               batch=len(dfs)), \
@@ -469,15 +615,69 @@ class OnlinePlacer:
         """Start a micro-batch admission: dispatch the batched DP against a
         residual snapshot and return without waiting.  The device solve runs
         while the caller does host work (typically committing the previous
-        batch); :meth:`commit_admit` finishes the admission."""
+        batch); :meth:`commit_admit` finishes the admission.
+
+        With the cache enabled each request is classified first (see
+        :class:`PendingAdmission`); only the cold subset dispatches the
+        full DP and only the stale-entry subset dispatches the bounded
+        warm-started correction pass — a batch of pure repeats dispatches
+        no solve at all."""
         dfs = list(dfs)
         if metas is None:
             metas = [("", 0)] * len(dfs)
         if not dfs:
             return PendingAdmission([], [], None, self.epoch, tag=tag)
         self.stats.batches += 1
-        handle = self._dispatch_solve(dfs)
-        return PendingAdmission(dfs, list(metas), handle, self.epoch, tag=tag)
+        cache = self._cache
+        if cache is None:
+            handle = self._dispatch_solve(dfs)
+            return PendingAdmission(dfs, list(metas), handle, self.epoch,
+                                    tag=tag)
+        t0 = time.perf_counter()
+        rg = self.residual_graph()
+        stamp = self._stamp()
+        warm_ok = (self.method in engine.BATCHED_METHODS
+                   and self.max_correction_supersteps > 0)
+        plan: list[tuple] = []
+        for df in dfs:
+            sig = request_signature(df)
+            if cache.negative_hit(sig, stamp):
+                self.stats.cache_neg_hits += 1
+                plan.append(("neg", None))
+                continue
+            entry = cache.get(sig)
+            if entry is None:
+                self.stats.cache_misses += 1
+                plan.append(("cold", None))
+                continue
+            if (self.node_up[df.src] and self.node_up[df.dst]
+                    and self._admissible(df, entry, rg)):
+                # provisional hit: commit_admit revalidates against the
+                # then-current residual before any reserve
+                plan.append(("hit", entry))
+                continue
+            self.stats.cache_stale += 1
+            seed = None
+            if warm_ok:
+                from .leastcost import warm_seed_from_mapping
+                seed = warm_seed_from_mapping(rg, df, entry)
+            plan.append(("warm", seed) if seed is not None else ("cold", None))
+        cold_idx = [i for i, (k, _) in enumerate(plan) if k == "cold"]
+        warm_idx = [i for i, (k, _) in enumerate(plan) if k == "warm"]
+        self.stats.overhead_ms += 1e3 * (time.perf_counter() - t0)
+        handle = (self._dispatch_solve([dfs[i] for i in cold_idx])
+                  if cold_idx else None)
+        warm_handle = None
+        if warm_idx:
+            warm_handle = self._dispatch_solve(
+                [dfs[i] for i in warm_idx],
+                warm_starts=[plan[i][1] for i in warm_idx],
+                max_rounds=self.max_correction_supersteps,
+            )
+        return PendingAdmission(dfs, list(metas), handle, self.epoch, tag=tag,
+                                plan=plan, cold_idx=cold_idx,
+                                warm_idx=warm_idx, warm_handle=warm_handle,
+                                stamp=stamp)
 
     def commit_admit(self, pending: PendingAdmission) -> list[Optional[Ticket]]:
         """Finish an in-flight admission: block on the solve (the only
@@ -500,20 +700,48 @@ class OnlinePlacer:
         dfs, metas = pending.dfs, pending.metas
         if not dfs:
             return []
+        plan = pending.plan
         if pending.epoch != self.epoch:
             # the network changed shape under the in-flight solve: results
             # are unsalvageable (routes may cross dead elements in ways
             # validation against residuals can't always see) — invalidate,
-            # re-solve on the current network
+            # re-solve on the current network.  Cached dispositions are
+            # discarded with the rest: dispatch-time hits were validated
+            # against a residual whose epoch is gone.
+            plan = None
             self.stats.stale_batches += 1
             with self.tracer.span("solve.resolve_stale", track="placer",
                                   cat="solve", batch=len(dfs)):
                 mappings, st = self._dispatch_solve(dfs).finalize()
-        else:
+            self._note_solve(st)
+        elif plan is None:
             with self.tracer.span("solve.wait", track="placer", cat="solve",
                                   batch=len(dfs)):
                 mappings, st = pending.handle.finalize()
-        self._note_solve(st)
+            self._note_solve(st)
+        else:
+            # merge the classified subsets back into request order; only
+            # the dispatched subsets count as solves (cache hits are zero
+            # DP work and must not deflate the solve timing/size stats)
+            mappings = [None] * len(dfs)
+            for i, (kind, payload) in enumerate(plan):
+                if kind == "hit":
+                    mappings[i] = payload
+            if pending.handle is not None:
+                with self.tracer.span("solve.wait", track="placer",
+                                      cat="solve", batch=len(pending.cold_idx)):
+                    cold_maps, st = pending.handle.finalize()
+                self._note_solve(st)
+                for i, m in zip(pending.cold_idx, cold_maps):
+                    mappings[i] = m
+            if pending.warm_handle is not None:
+                with self.tracer.span("solve.warm_wait", track="placer",
+                                      cat="solve", batch=len(pending.warm_idx)):
+                    warm_maps, wst = pending.warm_handle.finalize()
+                self._note_solve(wst, mode="warm")
+                for i, m in zip(pending.warm_idx, warm_maps):
+                    mappings[i] = m
+        cache = self._cache if plan is not None else None
         span = self.tracer.span("validate.commit", track="placer",
                                 cat="admit", batch=len(dfs))
         t_host = time.perf_counter()
@@ -521,20 +749,29 @@ class OnlinePlacer:
         out: list[Optional[Ticket]] = []
         with span:
             current = self.residual_graph()
-            for df, m, (tenant, klass) in zip(dfs, mappings, metas):
+            for idx, (df, m, (tenant, klass)) in enumerate(
+                    zip(dfs, mappings, metas)):
+                kind = plan[idx][0] if plan is not None else "cold"
                 if (
                     m is not None
                     and self.node_up[df.src]
                     and self.node_up[df.dst]
                     and self._admissible(df, m, current)
                 ):
+                    if kind == "hit":
+                        self.stats.cache_hits += 1
                     self.stats.admitted += 1
                     out.append(self._commit(df, m, tenant=tenant, klass=klass))
                     current = self.residual_graph()
                 elif m is not None:
                     # stale snapshot (a commit since dispatch took the
-                    # capacity) — optimistic-concurrency retry, individually
-                    self.stats.batch_conflicts += 1
+                    # capacity) — optimistic-concurrency retry, individually.
+                    # A dispatch-time hit invalidated by an earlier commit in
+                    # this batch lands here too; the retry's own cache lookup
+                    # counts it as stale, so it is not a batch conflict (no
+                    # solver work was wasted on it).
+                    if kind != "hit":
+                        self.stats.batch_conflicts += 1
                     t0 = time.perf_counter()
                     with self.tracer.span("conflict.resolve", track="placer",
                                           cat="admit"):
@@ -543,8 +780,28 @@ class OnlinePlacer:
                     out.append(t)
                     if t is not None:
                         current = self.residual_graph()
+                elif kind == "warm":
+                    # the bounded correction pass placed nothing — the fuse:
+                    # fall back to a full cold re-solve so admission quality
+                    # is never below the cold path
+                    self.stats.warm_fallbacks += 1
+                    t0 = time.perf_counter()
+                    with self.tracer.span("warm.fallback", track="placer",
+                                          cat="admit"):
+                        t = self.admit(df, tenant=tenant, klass=klass)
+                    conflict_ms += 1e3 * (time.perf_counter() - t0)
+                    out.append(t)
+                    if t is not None:
+                        current = self.residual_graph()
                 else:
                     self.stats.rejected += 1
+                    if (cache is not None and kind == "cold"
+                            and self._stamp() == pending.stamp):
+                        # the residual is bit-identical to the dispatch
+                        # snapshot the solve rejected against: an exact-
+                        # stamp negative is sound
+                        cache.put_negative(request_signature(df),
+                                           pending.stamp)
                     out.append(None)
         self.stats.conflict_resolve_ms += conflict_ms
         self.stats.overhead_ms += 1e3 * (time.perf_counter() - t_host) - conflict_ms
@@ -587,10 +844,29 @@ class OnlinePlacer:
         )
         engine.solve(rg, warm, method=self.method, **self.solve_cfg)
         warm_max = 1 << max(1, int(max_batch - 1).bit_length())
+        # tier-2 correction solves compile their own specialization (warm
+        # frontier tensors + the bounded-rounds fuse); pre-compile the
+        # common seed-length buckets so the first stale-entry batch does
+        # not pay the trace inside a timed admission
+        seed = None
+        if self.cache is not None and self.max_correction_supersteps > 0:
+            seed = {
+                "v": np.zeros(4, np.int32),
+                "j": np.arange(1, 5, dtype=np.int32).clip(max=p),
+                "cost": np.zeros(4, np.float32),
+                "pv": np.zeros(4, np.int32),
+                "pj": np.arange(0, 4, dtype=np.int32).clip(max=p - 1),
+            }
         b = 1
         while b <= warm_max:
             engine.solve_batch(rg, [warm] * b, method=self.method,
                                bucket_batch=True, **self.solve_cfg)
+            if seed is not None:
+                engine.solve_batch(
+                    rg, [warm] * b, method=self.method, bucket_batch=True,
+                    warm_starts=[seed] * b,
+                    max_rounds=self.max_correction_supersteps,
+                    **self.solve_cfg)
             b *= 2
         self.res.warm_deltas()  # the commit-side scatter-add buckets too
         return warm_max

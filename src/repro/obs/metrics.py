@@ -52,15 +52,18 @@ class Histogram:
         self.max = float("-inf")
         self.buckets: dict[int, int] = {}  # bucket i covers [2^(i-1), 2^i)
 
-    def observe(self, v: float) -> None:
-        self.count += 1
-        self.sum += v
+    def observe(self, v: float, n: int = 1) -> None:
+        """Record value ``v``; ``n`` > 1 records it with weight ``n`` (the
+        pull-based adapters fold pre-aggregated ``{value: count}`` surfaces
+        like the placer's superstep buckets without replaying samples)."""
+        self.count += n
+        self.sum += v * n
         if v < self.min:
             self.min = v
         if v > self.max:
             self.max = v
         b = int(v).bit_length() if v >= 1 else (-1 if v > 0 else 0)
-        self.buckets[b] = self.buckets.get(b, 0) + 1
+        self.buckets[b] = self.buckets.get(b, 0) + n
 
     def merge(self, other: "Histogram") -> None:
         self.count += other.count
@@ -107,12 +110,12 @@ class MetricsRegistry:
     def gauge(self, name: str, value: float, **labels) -> None:
         self._gauges[_key(name, labels)] = value
 
-    def observe(self, name: str, value: float, **labels) -> None:
+    def observe(self, name: str, value: float, n: int = 1, **labels) -> None:
         k = _key(name, labels)
         h = self._hists.get(k)
         if h is None:
             h = self._hists[k] = Histogram()
-        h.observe(value)
+        h.observe(value, n)
 
     # -- read -----------------------------------------------------------------
 
@@ -243,6 +246,13 @@ def absorb_online_stats(reg: MetricsRegistry, st, **labels) -> MetricsRegistry:
     for impl, cnt in getattr(st, "kernel_impls", {}).items():
         reg.inc("placer.solves_by_impl", float(cnt), kernel_impl=impl,
                 **labels)
+    # superstep histograms per solve mode ("cold" vs the warm-started
+    # bounded correction pass) — the stat the incremental fast path is
+    # graded on: warm solves must report strictly fewer supersteps
+    for mode, buckets in getattr(st, "supersteps", {}).items():
+        for rounds, cnt in buckets.items():
+            reg.observe("engine.supersteps", float(rounds), n=int(cnt),
+                        mode=mode, **labels)
     if st.solves:
         reg.gauge("placer.mean_solve_n", float(st.mean_solve_n), **labels)
     return reg

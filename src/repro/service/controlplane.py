@@ -154,7 +154,13 @@ class ControlPlane:
         ``tracer`` (:class:`repro.obs.Tracer`) records request-lifecycle
         flow events (submit/dispatch/admit/reject/preempt/release) and
         pump/solve/defrag spans; defaults to the no-op
-        :data:`repro.obs.NULL`."""
+        :data:`repro.obs.NULL`.
+
+        The incremental-fast-path knobs (``cache_enabled`` /
+        ``cache_size`` / ``max_correction_supersteps``) ride
+        ``**solve_cfg`` into the plane's :class:`OnlinePlacer`, as they
+        do for every plane class — the placer consumes them as named
+        parameters, so they never leak into the solver backend."""
         assert int(regions) <= 1, "regions > 1 is dispatched in __new__"
         # nesting kwargs are facade-dispatched in __new__; reaching this
         # body with either set means a direct centralized construction

@@ -83,78 +83,74 @@ def defrag(
         placer.tickets.values(), key=lambda t: (-t.klass, t.tid)
     )
 
-    # clear the standing set; re-solve it as one batched solve on the blank
-    # residual (stats churn from this speculative work is reconciled below)
-    with placer.tracer.span("defrag.repack", track="placer", cat="defrag",
-                            standing=len(standing)):
-        for t in standing:
-            placer.release(t, reason=None)
-        new = placer.admit_many(
-            [t.df for t in standing],
-            metas=[(t.tenant, t.klass) for t in standing],
-        )
-    ok = all(nt is not None for nt in new)
+    with placer.cache_suspended():
+        # The re-pack runs with the SolutionCache bypassed: serving the
+        # just-released standing mappings back from cache would make the
+        # re-optimization a structural no-op (and the speculative
+        # release/commit churn must not pollute the cache either way).
 
-    def _admit_extras() -> list[tuple[int, Ticket]]:
-        """One batched solve over the extras (micro-batched admission with
-        per-result revalidation, same as the service path)."""
-        if not extras:
-            return []
-        tickets = placer.admit_many(
-            [df for df, _ in extras], metas=[meta for _, meta in extras]
-        )
-        return [(i, t) for i, t in enumerate(tickets) if t is not None]
+        # clear the standing set; re-solve it as one batched solve on the
+        # blank residual (stats churn from this speculative work is
+        # reconciled below)
+        with placer.tracer.span("defrag.repack", track="placer", cat="defrag",
+                                standing=len(standing)):
+            for t in standing:
+                placer.release(t, reason=None)
+            new = placer.admit_many(
+                [t.df for t in standing],
+                metas=[(t.tenant, t.klass) for t in standing],
+            )
+        ok = all(nt is not None for nt in new)
 
-    readmitted: list[tuple[int, Ticket]] = []
-    moved = 0
-    obj_after = obj_before
-    if ok:
-        kept: list[Ticket] = []
-        for t, nt in zip(standing, new):
-            kept.append(placer.rekey(nt, t.tid))
-            moved += int(nt.mapping.assign != t.mapping.assign)
-        readmitted = _admit_extras()
-        obj_after = global_objective(placer)
+        def _admit_extras() -> list[tuple[int, Ticket]]:
+            """One batched solve over the extras (micro-batched admission
+            with per-result revalidation, same as the service path)."""
+            if not extras:
+                return []
+            tickets = placer.admit_many(
+                [df for df, _ in extras], metas=[meta for _, meta in extras]
+            )
+            return [(i, t) for i, t in enumerate(tickets) if t is not None]
 
-    repacked = ok and obj_after > obj_before
-    # speculative solves did real work: solve accounting survives rollback
-    solve_ms = placer.stats.solve_ms
-    overhead_ms = placer.stats.overhead_ms
-    conflict_ms = placer.stats.conflict_resolve_ms
-    solves, solve_n_sum = placer.stats.solves, placer.stats.solve_n_sum
-    kernel_impls = dict(placer.stats.kernel_impls)
-    if not repacked:
-        placer.restore(snap)
-        placer.stats.solve_ms = solve_ms
-        placer.stats.overhead_ms = overhead_ms
-        placer.stats.conflict_resolve_ms = conflict_ms
-        placer.stats.solves, placer.stats.solve_n_sum = solves, solve_n_sum
-        placer.stats.kernel_impls = kernel_impls
-        # fallback: keep the standing placement, retry the extras on the
-        # current residual (probe rejections are not service rejections)
-        readmitted = _admit_extras()
-        placer.stats.rejected = snap["stats"].rejected
-        placer.stats.defrag_rounds += 1
-        placer.stats.defrag_commits += bool(readmitted)
-        placer.check_invariants()
-        return DefragResult(
-            committed=bool(readmitted),
-            repacked=False,
-            objective_before=obj_before,
-            objective_after=global_objective(placer),
-            standing=len(standing),
-            moved=0,
-            readmitted=readmitted,
-        )
+        readmitted: list[tuple[int, Ticket]] = []
+        moved = 0
+        obj_after = obj_before
+        if ok:
+            kept: list[Ticket] = []
+            for t, nt in zip(standing, new):
+                kept.append(placer.rekey(nt, t.tid))
+                moved += int(nt.mapping.assign != t.mapping.assign)
+            readmitted = _admit_extras()
+            obj_after = global_objective(placer)
+
+        repacked = ok and obj_after > obj_before
+        # speculative solves did real work: solve accounting (wall clock,
+        # solve counts, cache/warm traffic) survives rollback
+        acct = placer.stats.solve_accounting()
+        if not repacked:
+            placer.restore(snap)
+            placer.stats.restore_solve_accounting(acct)
+            # fallback: keep the standing placement, retry the extras on the
+            # current residual (probe rejections are not service rejections)
+            readmitted = _admit_extras()
+            placer.stats.rejected = snap["stats"].rejected
+            placer.stats.defrag_rounds += 1
+            placer.stats.defrag_commits += bool(readmitted)
+            placer.check_invariants()
+            return DefragResult(
+                committed=bool(readmitted),
+                repacked=False,
+                objective_before=obj_before,
+                objective_after=global_objective(placer),
+                standing=len(standing),
+                moved=0,
+                readmitted=readmitted,
+            )
 
     # committed re-pack: rebase stats on the snapshot so the speculative
     # release/re-admit churn vanishes and only the net effect remains
     stats = snap["stats"].clone()
-    stats.solve_ms = solve_ms
-    stats.overhead_ms = overhead_ms
-    stats.conflict_resolve_ms = conflict_ms
-    stats.solves, stats.solve_n_sum = solves, solve_n_sum
-    stats.kernel_impls = kernel_impls
+    stats.restore_solve_accounting(acct)
     stats.admitted += len(readmitted)
     stats.defrag_rounds += 1
     stats.defrag_commits += 1

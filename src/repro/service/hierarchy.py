@@ -126,7 +126,10 @@ class HierarchicalControlPlane(ChainBroker):
     release / fail_* / restore_* / defrag / conservation /
     fairness_report / engine_stats / check_invariants / active_ids), plus
     the ``broker_admit`` / ``broker_release`` parent-broker interface so
-    hierarchies nest to any depth."""
+    hierarchies nest to any depth.  ``**solve_cfg`` (including the
+    incremental-fast-path knobs ``cache_enabled`` / ``cache_size`` /
+    ``max_correction_supersteps``) propagates through every level down to
+    the leaf planes' per-region placers."""
 
     def __init__(
         self,

@@ -665,6 +665,14 @@ class RegionalControlPlane(ChainBroker):
     global gateways) handles; ``defrag`` returns one
     :class:`~repro.service.defrag.DefragResult` per region — there is no
     global re-solve, by design.
+
+    ``**solve_cfg`` (including the incremental-fast-path knobs
+    ``cache_enabled`` / ``cache_size`` / ``max_correction_supersteps``)
+    is forwarded to every per-region placer: each region keeps its own
+    :class:`~repro.core.solution_cache.SolutionCache` over *view-local*
+    request signatures, invalidated by its own residual version + epoch —
+    no cross-region cache coherence is needed because a region only ever
+    admits against its own residual truth.
     """
 
     def __init__(

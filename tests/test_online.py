@@ -366,9 +366,13 @@ def test_warmup_precompiles_every_bucket_and_commits_nothing():
     # nothing committed, nothing counted
     np.testing.assert_array_equal(placer.cap, rg.cap.astype(np.float64))
     assert placer.stats.batches == 0 and placer.stats.solves == 0
-    assert lc._vmapped_dp.cache_info().currsize == 1
-    fn = lc._vmapped_dp(rg.n, 5, rg.n - 1)
+    # two vmapped variants: the cold fixpoint DP plus the warm-seeded
+    # bounded-correction specialization (tier-2 fast path)
+    assert lc._vmapped_dp.cache_info().currsize == 2
+    fn = lc._vmapped_dp(rg.n, 5, rg.n - 1, False)
     assert fn._cache_size() == 4, fn._cache_size()  # {1, 2, 4, 8}
+    fnw = lc._vmapped_dp(rg.n, 5, placer.max_correction_supersteps, True)
+    assert fnw._cache_size() == 4, fnw._cache_size()
 
     for b in (1, 3, 5, 8):  # non-power-of-two sizes bucket up
         dfs = [
@@ -377,6 +381,6 @@ def test_warmup_precompiles_every_bucket_and_commits_nothing():
             for i in range(b)
         ]
         placer.admit_many(dfs)
-    assert lc._vmapped_dp.cache_info().currsize == 1
+    assert lc._vmapped_dp.cache_info().currsize == 2
     assert fn._cache_size() == 4  # no new specializations
     placer.check_invariants()
